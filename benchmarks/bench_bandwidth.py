@@ -1,0 +1,30 @@
+"""Fig 10: prefetch coverage vs PCIe bandwidth generations (8-128 GB/s)."""
+from __future__ import annotations
+
+from benchmarks.common import build_engine, emit, run_workload
+from repro.core.memsim import HWConfig
+
+
+def coverage(engine):
+    """Fraction of expert activations served without a demand fetch."""
+    s = engine.stats()
+    total = s["demand_fetches"] + s["prefetch_hits"] + \
+        engine.offload.gpu_cache.hits
+    return 1.0 - s["demand_fetches"] / max(1, total)
+
+
+def main(quick=True):
+    bws = [8, 32, 128] if quick else [8, 16, 32, 64, 128]
+    n = 20 if quick else 50
+    for model in ["switch-large-128"] + ([] if quick else ["nllb-moe-128"]):
+        for bw in bws:
+            hw = HWConfig(dram_to_dev_gbps=float(bw))
+            for system in ("moe-infinity", "pytorch-um"):
+                eng = build_engine(model, system, hw=hw)
+                run_workload(eng, n_requests=n, rps=2.0)
+                emit(f"fig10/{model}/{system}/bw={bw}GBps",
+                     round(coverage(eng), 3), "coverage")
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -1,0 +1,22 @@
+"""Fig 6: impact of batch size (1..64) on per-token latency."""
+from __future__ import annotations
+
+from benchmarks.common import build_engine, emit, run_workload
+
+
+def main(quick=True):
+    batches = [1, 8, 32] if quick else [1, 4, 8, 16, 32, 64]
+    n = 24 if quick else 64
+    for model in (["switch-large-128"] if quick
+                  else ["switch-large-128", "nllb-moe-128"]):
+        for system in ("moe-infinity", "pytorch-um"):
+            for b in batches:
+                eng = build_engine(model, system, max_batch=b)
+                run_workload(eng, n_requests=n, rps=50.0)  # saturating load
+                lat = eng.stats()["mean_token_latency"]
+                emit(f"fig6/{model}/{system}/batch={b}",
+                     round(lat * 1000, 2), "ms/token")
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -1,0 +1,47 @@
+"""Fig 7: deployment cost — devices needed to meet the 1-second SLO.
+
+Multi-GPU scaling model: n devices give n parallel PCIe links and n× the
+expert cache (the paper's §7 multi-GPU optimizations); we scale gpu slots
+and link bandwidth accordingly.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import build_engine, emit, run_workload
+from repro.core.memsim import HWConfig
+
+SLO = 0.05  # 50 ms/token (scaled to our generous-baseline regime; paper: 1 s)
+
+
+def latency_with_gpus(model, system, n_gpus, quick):
+    from repro.configs import get_config
+    from benchmarks.common import n_moe_layers
+    hw = HWConfig(dram_to_dev_gbps=25.0 * n_gpus)
+    arch = get_config(model)
+    total = arch.moe.n_experts * n_moe_layers(arch)
+    eng = build_engine(model, system, hw=hw,
+                       gpu_slots=min(total, (total // 5) * n_gpus))
+    reqs = run_workload(eng, n_requests=20 if quick else 60, rps=1.0)
+    return float(np.mean([r.per_token_latency for r in reqs]))
+
+
+def main(quick=True):
+    gpus = [1, 2, 4, 8]
+    for model in ["switch-large-128", "nllb-moe-128"]:
+        mins = {}
+        for system in ("moe-infinity", "zero-style"):
+            need = None
+            for n in gpus:
+                lat = latency_with_gpus(model, system, n, quick)
+                emit(f"fig7/{model}/{system}/gpus={n}",
+                     round(lat * 1000, 1), "ms/token")
+                if need is None and lat <= SLO:
+                    need = n
+            mins[system] = need or (">%d" % gpus[-1])
+            emit(f"fig7/{model}/{system}/min-gpus-for-slo", mins[system],
+                 "gpus", f"SLO {SLO*1000:.0f}ms/token")
+
+
+if __name__ == "__main__":
+    main(quick=False)

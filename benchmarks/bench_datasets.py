@@ -1,0 +1,35 @@
+"""Fig 8: robustness across datasets (per-task workloads vs the mix)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import build_engine, emit
+from repro.serving.workload import (WorkloadConfig, attach_arrivals,
+                                    azure_like_arrivals, make_dataset)
+
+DATASETS = {"flan": [0], "bigbench": [1], "mmlu": [2], "mixed": [0, 1, 2]}
+
+
+def main(quick=True):
+    n = 20 if quick else 60
+    lat_by = {}
+    for name, tasks in DATASETS.items():
+        for system in ("moe-infinity", "pytorch-um"):
+            eng = build_engine("nllb-moe-128", system)
+            reqs = make_dataset(WorkloadConfig(prompt_len=(24, 64),
+                                               output_len=(8, 32)),
+                                n, seed=5, tasks=tasks)
+            attach_arrivals(reqs, azure_like_arrivals(n, rps=1.0, seed=6))
+            eng.run(reqs)
+            lat = eng.stats()["mean_token_latency"]
+            lat_by[(name, system)] = lat
+            emit(f"fig8/{name}/{system}", round(lat * 1000, 2), "ms/token")
+    pure = [d for d in DATASETS if d != "mixed"]
+    spread = max(lat_by[(d, "moe-infinity")] for d in pure) - \
+        min(lat_by[(d, "moe-infinity")] for d in pure)
+    emit("fig8/moe-infinity-dataset-spread", round(spread * 1000, 2), "ms",
+         "latency variation across datasets (paper: small)")
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -1,0 +1,48 @@
+"""Fig 12: impact of EAMC capacity on latency + prediction accuracy,
+plus §4.3 memory/compute overhead of the EAMC lookup."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (build_eamc, build_engine, build_oracle, emit,
+                               run_workload)
+from benchmarks.bench_prefetch import measure_accuracy
+from repro.configs import get_config
+from repro.core.prefetch import ActivationAwarePrefetcher
+
+
+def main(quick=True):
+    caps = [5, 25, 100] if quick else [5, 10, 25, 50, 100, 200]
+    arch = get_config("switch-large-128")
+    oracle = build_oracle(arch, n_tasks=6)
+    for cap in caps:
+        eamc = build_eamc(arch, oracle, capacity=cap,
+                          n_seqs=60 if quick else 150)
+        acc = measure_accuracy(ActivationAwarePrefetcher(eamc), oracle,
+                               budget=8, n_seqs=12 if quick else 30)
+        eng = build_engine("switch-large-128", "moe-infinity", eamc=eamc,
+                           oracle=oracle)
+        run_workload(eng, n_requests=16 if quick else 40, rps=1.0)
+        emit(f"fig12/cap={cap}/accuracy", round(acc, 3), "recall")
+        emit(f"fig12/cap={cap}/latency",
+             round(eng.stats()["mean_token_latency"] * 1000, 2), "ms/token")
+
+    # §4.3 overheads: EAMC memory + lookup time
+    eamc = build_eamc(arch, oracle, capacity=300, n_seqs=80)
+    nbytes = sum(m.nbytes for m in eamc.entries)
+    cur = eamc.entries[0] * 0.5
+    t0 = time.perf_counter()
+    reps = 200
+    for _ in range(reps):
+        eamc.lookup(cur)
+    us = (time.perf_counter() - t0) / reps * 1e6
+    emit("sec4.3/eamc-memory", round(nbytes / 1e6, 3), "MB",
+         "paper: 1.8MB for 300 EAMs")
+    emit("sec4.3/eamc-lookup", round(us, 1), "us/call",
+         "paper: 21us")
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -1,0 +1,68 @@
+"""Kernel micro-bench: oracle timing on CPU + interpret-mode correctness
+sweep (wall-clock MXU numbers require real TPU; see §Roofline for the
+analytic picture)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels import ref
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.moe_ffn import moe_ffn
+from repro.kernels.wkv6 import wkv6
+
+
+def _time(f, *args, reps=5):
+    f(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main(quick=True):
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+    # moe_ffn
+    E, C, d, f = (4, 128, 256, 512)
+    xg = jax.random.normal(ks[0], (E, C, d))
+    wg = jax.random.normal(ks[1], (E, d, f)) * 0.05
+    wu = jax.random.normal(ks[2], (E, d, f)) * 0.05
+    wd = jax.random.normal(ks[3], (E, f, d)) * 0.05
+    us = _time(jax.jit(lambda *a: ref.moe_ffn_ref(*a)), xg, wg, wu, wd)
+    y_k = moe_ffn(xg, wg, wu, wd, interpret=True)
+    err = float(jnp.abs(y_k - ref.moe_ffn_ref(xg, wg, wu, wd)).max())
+    flops = 3 * 2 * E * C * d * f
+    emit("kernel/moe_ffn/oracle-cpu", round(us, 1), "us/call",
+         f"{flops/1e9:.2f} GFLOP; kernel-vs-oracle err {err:.1e}")
+
+    # flash_decode
+    B, H, Hkv, hd, S = 2, 8, 2, 64, 2048
+    q = jax.random.normal(ks[4], (B, H, hd))
+    k = jax.random.normal(ks[5], (B, S, Hkv, hd))
+    v = jax.random.normal(ks[6], (B, S, Hkv, hd))
+    us = _time(jax.jit(lambda *a: ref.flash_decode_ref(*a)), q, k, v, S)
+    y_k = flash_decode(q, k, v, S, block_s=512, interpret=True)
+    err = float(jnp.abs(y_k - ref.flash_decode_ref(q, k, v, S)).max())
+    emit("kernel/flash_decode/oracle-cpu", round(us, 1), "us/call",
+         f"S={S}; kernel-vs-oracle err {err:.1e}")
+
+    # wkv6
+    BH, T = 4, 128
+    r = jax.random.normal(ks[7], (BH, T, hd)) * 0.5
+    kk, vv = r + 0.1, r - 0.1
+    w = jax.nn.sigmoid(r)
+    u = jnp.zeros((BH, hd))
+    s0 = jnp.zeros((BH, hd, hd))
+    us = _time(jax.jit(lambda *a: ref.wkv6_ref(*a)[0]), r, kk, vv, w, u, s0)
+    o_k, _ = wkv6(r, kk, vv, w, u, s0, chunk=64, interpret=True)
+    err = float(jnp.abs(o_k - ref.wkv6_ref(r, kk, vv, w, u, s0)[0]).max())
+    emit("kernel/wkv6/oracle-cpu", round(us, 1), "us/call",
+         f"T={T}; kernel-vs-oracle err {err:.1e}")
+
+
+if __name__ == "__main__":
+    main(quick=False)

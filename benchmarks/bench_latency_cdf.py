@@ -1,0 +1,22 @@
+"""Fig 5: latency CDF under low / high load (MoE-Infinity vs PyTorch-UM)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import build_engine, emit, run_workload
+
+
+def main(quick=True):
+    n = 30 if quick else 100
+    for load, rps in (("low", 0.5), ("high", 6.0)):
+        for system in ("moe-infinity", "pytorch-um"):
+            eng = build_engine("switch-large-128", system)
+            run_workload(eng, n_requests=n, rps=rps, seed=11)
+            lat = np.array(eng.token_latencies) * 1000
+            for p in (50, 90, 99):
+                emit(f"fig5/{load}/{system}/p{p}",
+                     round(float(np.percentile(lat, p)), 2), "ms/token")
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -1,0 +1,38 @@
+"""§Roofline: three-term roofline table from the dry-run JSONs (run
+``python -m repro.launch.dryrun --all`` first; this bench reads its output)."""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import emit
+from repro.config import INPUT_SHAPES
+from repro.configs import get_config
+from repro.launch import roofline
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def main(quick=True):
+    if not os.path.isdir(DRYRUN_DIR):
+        emit("roofline/status", "no-dryrun-data", "",
+             "run `python -m repro.launch.dryrun --all` first")
+        return
+    recs = roofline.load_records(DRYRUN_DIR)
+    ok = [r for r in recs if r.get("status") == "ok"
+          and not r["mesh"].startswith("debug")]
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        cfg = get_config(r["arch"])
+        shape = INPUT_SHAPES[r["shape"]]
+        rf = roofline.analyze(r, roofline.model_flops_for(cfg, shape,
+                                                          r["kind"]))
+        tag = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        emit(f"{tag}/compute", f"{rf.compute_s:.3e}", "s")
+        emit(f"{tag}/memory", f"{rf.memory_s:.3e}", "s")
+        emit(f"{tag}/collective", f"{rf.collective_s:.3e}", "s")
+        emit(f"{tag}/dominant", rf.dominant, "",
+             f"useful-flops ratio {rf.useful_ratio:.2f}")
+    emit("roofline/combos-analyzed", len(ok), "records")
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -1,0 +1,37 @@
+"""Fig 4: per-token latency vs requests-per-second, per model × system."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import build_engine, emit, run_workload
+
+MODELS = ["switch-base-128", "switch-base-256", "switch-large-128",
+          "nllb-moe-128"]
+SYSTEMS = ["moe-infinity", "pytorch-um", "zero-style"]
+
+
+def main(quick=True):
+    rps_list = [0.5, 2.0] if quick else [0.5, 1.0, 2.0, 4.0, 8.0]
+    models = MODELS[:2] if quick else MODELS
+    n = 24 if quick else 80
+    results = {}
+    for model in models:
+        for system in SYSTEMS:
+            for rps in rps_list:
+                eng = build_engine(model, system)
+                reqs = run_workload(eng, n_requests=n, rps=rps)
+                lat = eng.stats()["mean_token_latency"]
+                results[(model, system, rps)] = lat
+                emit(f"fig4/{model}/{system}/rps={rps}",
+                     round(lat * 1000, 2), "ms/token")
+    # paper claim: MoE-Infinity is fastest at every point
+    wins = sum(
+        results[(m, "moe-infinity", r)] <= min(
+            results[(m, s, r)] for s in SYSTEMS)
+        for m in models for r in rps_list)
+    emit("fig4/moe-infinity-wins", wins, "points",
+         f"of {len(models) * len(rps_list)}")
+
+
+if __name__ == "__main__":
+    main(quick=False)

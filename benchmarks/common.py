@@ -1,0 +1,104 @@
+"""Shared benchmark scaffolding: workload + engine builders.
+
+All benchmarks run the trace-mode serving engine (real policy code, real
+event simulator, synthetic task-conditioned routing — DESIGN.md §3) and
+print ``name,value,unit,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.eam import EAMC
+from repro.core.memsim import HWConfig
+from repro.serving import EngineConfig, SchedulerConfig, ServingEngine
+from repro.serving.engine import RoutingOracle
+from repro.serving.workload import (WorkloadConfig, attach_arrivals,
+                                    azure_like_arrivals, make_dataset)
+
+N_TASKS = 3
+
+
+def n_moe_layers(arch):
+    return sum(arch.is_moe_layer(i) for i in range(arch.n_layers))
+
+
+def build_oracle(arch, n_tasks=N_TASKS, seed=7, concentration=0.05):
+    return RoutingOracle(n_layers=n_moe_layers(arch),
+                         n_experts=arch.moe.n_experts,
+                         n_tasks=n_tasks, top_k=arch.moe.top_k, seed=seed,
+                         concentration=concentration)
+
+
+def build_eamc(arch, oracle, capacity=32, n_seqs=60, seed=1,
+               prompt_tokens=16, iters=24):
+    rng = np.random.default_rng(seed)
+    L, E = oracle.n_layers, oracle.n_experts
+    eams = []
+    for i in range(n_seqs):
+        task = i % oracle.dist.shape[0]
+        eam = np.zeros((L, E))
+        for it in range(iters):
+            eam += oracle.route_tokens(task, prompt_tokens if it == 0 else 1,
+                                       rng)
+        eams.append(eam)
+    c = EAMC(capacity=capacity)
+    c.construct(eams)
+    return c
+
+
+SYSTEMS = {
+    # label -> (cache_policy, prefetch, gpu_frac_scale)
+    "moe-infinity": ("moe-infinity", "moe-infinity"),
+    "cache-only": ("moe-infinity", "none"),
+    "pytorch-um": ("lru", "none"),          # demand paging + LRU
+    "zero-style": ("lru", "topk"),          # prefetch-all-next-layer + LRU
+    "lfu": ("lfu", "none"),
+}
+
+
+def build_engine(arch_id="switch-base-128", system="moe-infinity", *,
+                 gpu_slots=None, dram_slots=None, eamc=None, oracle=None,
+                 hw=None, max_batch=16, seed=0, topk_all=True):
+    arch = get_config(arch_id)
+    oracle = oracle or build_oracle(arch)
+    eamc = eamc if eamc is not None else build_eamc(arch, oracle)
+    E, L = arch.moe.n_experts, n_moe_layers(arch)
+    total = E * L
+    gpu_slots = gpu_slots if gpu_slots is not None else total // 5
+    dram_slots = dram_slots if dram_slots is not None else (2 * total) // 3
+    policy, prefetch = SYSTEMS[system]
+    # CUDA-UM baseline: page-fault handling per on-demand migration —
+    # ~25 us per 2 MiB fault batch (driver fault storm; the paper observes
+    # <10% GPU utilization for PYTORCH-UM under load, §8.2)
+    from repro.serving.perf_model import expert_bytes as _ebytes
+    demand_overhead = 0.0
+    if system == "pytorch-um":
+        demand_overhead = 25e-6 * (_ebytes(arch, 4) / 2e6)
+    cfg = EngineConfig(arch=arch, gpu_cache_experts=gpu_slots,
+                       dram_cache_experts=dram_slots, cache_policy=policy,
+                       prefetch=prefetch, bytes_per_param=4,
+                       hw=hw or HWConfig(),
+                       scheduler=SchedulerConfig(max_batch=max_batch),
+                       demand_overhead_s=demand_overhead)
+    prefetcher = None
+    if prefetch == "topk":
+        from repro.core.prefetch import TopKPrefetcher
+        prefetcher = TopKPrefetcher(k=E if topk_all else 8)
+    return ServingEngine(cfg, eamc=eamc, oracle=oracle, seed=seed,
+                         prefetcher=prefetcher)
+
+
+def run_workload(engine, n_requests=40, rps=2.0, seed=3,
+                 prompt_len=(24, 64), output_len=(8, 32)):
+    reqs = make_dataset(WorkloadConfig(prompt_len=prompt_len,
+                                       output_len=output_len),
+                        n_requests, seed=seed)
+    attach_arrivals(reqs, azure_like_arrivals(n_requests, rps=rps,
+                                              seed=seed + 1))
+    engine.run(reqs)
+    return reqs
+
+
+def emit(name, value, unit="", derived=""):
+    print(f"{name},{value},{unit},{derived}")

@@ -1,0 +1,60 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``python -m benchmarks.run [--full] [--only fig9,...]`` prints
+``name,value,unit,derived`` CSV rows per benchmark.
+"""
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (bench_rps, bench_latency_cdf, bench_batch,
+                        bench_cost, bench_datasets, bench_prefetch,
+                        bench_bandwidth, bench_cache, bench_eamc,
+                        bench_drift, bench_cluster, bench_kernels,
+                        bench_roofline, bench_beyond)
+
+BENCHES = [
+    ("fig4_rps", bench_rps),
+    ("fig5_latency_cdf", bench_latency_cdf),
+    ("fig6_batch", bench_batch),
+    ("fig7_cost", bench_cost),
+    ("fig8_datasets", bench_datasets),
+    ("fig9_prefetch", bench_prefetch),
+    ("fig10_bandwidth", bench_bandwidth),
+    ("fig11_cache", bench_cache),
+    ("fig12_eamc", bench_eamc),
+    ("sec8.5_drift", bench_drift),
+    ("fig13_cluster", bench_cluster),
+    ("beyond_paper", bench_beyond),
+    ("kernels", bench_kernels),
+    ("roofline", bench_roofline),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full sweeps (slower); default is quick mode")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    print("name,value,unit,derived")
+    failures = 0
+    for name, mod in BENCHES:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        print(f"# === {name} ===", flush=True)
+        try:
+            mod.main(quick=not args.full)
+        except Exception:
+            failures += 1
+            print(f"# {name} FAILED:\n# " +
+                  traceback.format_exc().replace("\n", "\n# "))
+        print(f"# {name} took {time.time() - t0:.1f}s", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Re-run HLO analysis on saved .hlo.gz artifacts and refresh the matching
+dry-run JSONs (no recompilation)."""
+import gzip, json, os, sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.launch.hlo_analysis import analyze_hlo  # noqa: E402
+
+hlo_dir = sys.argv[1] if len(sys.argv) > 1 else "experiments/hlo"
+out_dir = sys.argv[2] if len(sys.argv) > 2 else "experiments/dryrun"
+n = 0
+for fn in sorted(os.listdir(hlo_dir)):
+    if not fn.endswith(".hlo.gz"):
+        continue
+    tag = fn[: -len(".hlo.gz")]
+    # hlo tags use mesh name; json tags use single/multi
+    arch_shape, mesh = tag.rsplit("__", 1)
+    jtag = arch_shape + "__" + ("multi" if mesh == "2x16x16" else "single")
+    jpath = os.path.join(out_dir, jtag + ".json")
+    if not os.path.exists(jpath):
+        print("no json for", tag)
+        continue
+    with gzip.open(os.path.join(hlo_dir, fn), "rt") as f:
+        hlo = f.read()
+    costs = analyze_hlo(hlo)
+    with open(jpath) as f:
+        rec = json.load(f)
+    rec["cost_corrected"] = {
+        "dot_flops": costs.dot_flops,
+        "bytes_accessed": costs.bytes_accessed,
+        "collective_bytes": dict(costs.collective_bytes),
+        "collective_counts": dict(costs.collective_counts),
+    }
+    with open(jpath, "w") as f:
+        json.dump(rec, f, indent=1)
+    n += 1
+print(f"reanalyzed {n} records")

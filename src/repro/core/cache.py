@@ -1,0 +1,236 @@
+"""Expert cache policies — Algorithm 2 and the paper's baselines (§6, §8.4).
+
+A cache holds expert keys ``(layer, expert)`` with a fixed slot capacity.
+``victim()`` picks the replacement victim. The activation-aware policy scores
+cached experts by the *current* sequence's EAM (cur_eam): activation ratio
+within the expert's layer × linear layer decay favouring early layers —
+exactly Algorithm 2.
+"""
+from __future__ import annotations
+
+from typing import Dict, Hashable, List, Optional
+
+import numpy as np
+
+Key = Hashable
+EPSILON = 1e-4
+MAX_PRIORITY = float("inf")
+
+
+class CachePolicy:
+    name = "base"
+
+    def on_access(self, key: Key, now: float) -> None:  # hit
+        pass
+
+    def on_insert(self, key: Key, now: float) -> None:
+        pass
+
+    def on_evict(self, key: Key) -> None:
+        pass
+
+    def victim(self, cached: List[Key], protected=frozenset()) -> Key:
+        raise NotImplementedError
+
+
+class ActivationAwareCache(CachePolicy):
+    """Algorithm 2: evict argmin over cached experts of
+    ``(cur_eam[l][e]/Σ_e cur_eam[l] + ε) · (1 − l/L)``.
+
+    Per §6.2 ("closely aligning the caching strategy with the prefetching
+    priorities") the activation ratio also sees the EAMC-*predicted* ratios
+    of the ongoing inference: an expert the prefetcher expects to need soon
+    scores as if already observed, so early-iteration arrivals cannot evict
+    the sequence's soon-to-run experts (the refetch ping-pong otherwise
+    costs ~40% extra demand fetches in our replay)."""
+
+    name = "moe-infinity"
+
+    def __init__(self, ctx):
+        self.ctx = ctx  # SequenceContext: .cur_eam (L,E), .predicted_ratios
+
+    def scores(self, cached: List[Key]) -> np.ndarray:
+        eam = self.ctx.cur_eam
+        pred = getattr(self.ctx, "predicted_ratios", None)
+        n_layers = eam.shape[0]
+        layer_tokens = eam.sum(axis=1)                     # (L,)
+        out = np.empty(len(cached))
+        for i, (l, e) in enumerate(cached):
+            n_token = layer_tokens[l]
+            p = (eam[l, e] / n_token) if n_token > 0 else 0.0
+            if pred is not None:
+                p = max(p, pred[l, e])
+            out[i] = (p + EPSILON) * (1.0 - l / n_layers)
+        return out
+
+    def victim(self, cached: List[Key], protected=frozenset()) -> Key:
+        s = self.scores(cached)
+        order = np.argsort(s, kind="stable")
+        for i in order:
+            if cached[i] not in protected:
+                return cached[i]
+        return cached[int(order[0])]
+
+
+class LRUCache(CachePolicy):
+    """CUDA-Unified-Memory-style least-recently-used."""
+
+    name = "lru"
+
+    def __init__(self):
+        self.last: Dict[Key, float] = {}
+        self._tick = 0.0
+
+    def _now(self, now):
+        self._tick += 1.0
+        return self._tick
+
+    def on_access(self, key, now):
+        self.last[key] = self._now(now)
+
+    def on_insert(self, key, now):
+        self.last[key] = self._now(now)
+
+    def on_evict(self, key):
+        self.last.pop(key, None)
+
+    def victim(self, cached, protected=frozenset()):
+        best = None
+        for k in cached:
+            if k in protected:
+                continue
+            if best is None or self.last.get(k, 0) < self.last.get(best, 0):
+                best = k
+        return best if best is not None else cached[0]
+
+
+class LFUCache(CachePolicy):
+    """BrainStorm-style least-frequently-used. Counter resets on eviction
+    (the behaviour the paper calls out in §8.4)."""
+
+    name = "lfu"
+
+    def __init__(self):
+        self.freq: Dict[Key, int] = {}
+
+    def on_access(self, key, now):
+        self.freq[key] = self.freq.get(key, 0) + 1
+
+    def on_insert(self, key, now):
+        self.freq[key] = self.freq.get(key, 0) + 1
+
+    def on_evict(self, key):
+        self.freq.pop(key, None)  # counter reset
+
+    def victim(self, cached, protected=frozenset()):
+        best = None
+        for k in cached:
+            if k in protected:
+                continue
+            if best is None or self.freq.get(k, 0) < self.freq.get(best, 0):
+                best = k
+        return best if best is not None else cached[0]
+
+
+class NeighborAwareCache(LRUCache):
+    """ZeRO-Infinity-style: LRU over *layer groups* — neighbours (same-layer
+    experts) are kept/evicted together, approximated by using the layer's
+    last access time for every member expert."""
+
+    name = "neighbor"
+
+    def on_access(self, key, now):
+        t = self._now(now)
+        self.last[key] = t
+        self.layer_last = getattr(self, "layer_last", {})
+        self.layer_last[key[0]] = t
+
+    def victim(self, cached, protected=frozenset()):
+        layer_last = getattr(self, "layer_last", {})
+        best, best_t = None, None
+        for k in cached:
+            if k in protected:
+                continue
+            t = max(self.last.get(k, 0), layer_last.get(k[0], 0))
+            if best is None or t < best_t:
+                best, best_t = k, t
+        return best if best is not None else cached[0]
+
+
+class OracleCache(CachePolicy):
+    """Belady's MIN: evict the expert whose next use is furthest in the
+    future. Needs the full future access trace (benchmark harness only)."""
+
+    name = "oracle"
+
+    def __init__(self, future: List[Key]):
+        # future[i] = key accessed at step i; consumed via .advance_to(i)
+        self.future = future
+        self.cursor = 0
+        self._next_use: Dict[Key, List[int]] = {}
+        for i, k in enumerate(future):
+            self._next_use.setdefault(k, []).append(i)
+
+    def advance_to(self, i: int) -> None:
+        self.cursor = i
+
+    def _next(self, key: Key) -> int:
+        uses = self._next_use.get(key, ())
+        for u in uses:
+            if u >= self.cursor:
+                return u
+        return 1 << 60
+
+    def victim(self, cached, protected=frozenset()):
+        best, best_u = None, -1
+        for k in cached:
+            if k in protected:
+                continue
+            u = self._next(k)
+            if u > best_u:
+                best, best_u = k, u
+        return best if best is not None else cached[0]
+
+
+class ExpertCache:
+    """A fixed-capacity expert cache driven by a pluggable policy."""
+
+    def __init__(self, capacity: int, policy: CachePolicy):
+        self.capacity = capacity
+        self.policy = policy
+        self.resident: List[Key] = []
+        self._set = set()
+        self.hits = 0
+        self.misses = 0
+
+    def __contains__(self, key: Key) -> bool:
+        return key in self._set
+
+    def access(self, key: Key, now: float = 0.0) -> bool:
+        if key in self._set:
+            self.hits += 1
+            self.policy.on_access(key, now)
+            return True
+        self.misses += 1
+        return False
+
+    def insert(self, key: Key, now: float = 0.0,
+               protected=frozenset()) -> Optional[Key]:
+        """Insert ``key``; returns the evicted victim (if any)."""
+        if key in self._set:
+            return None
+        evicted = None
+        if len(self.resident) >= self.capacity:
+            evicted = self.policy.victim(self.resident, protected)
+            self.resident.remove(evicted)
+            self._set.discard(evicted)
+            self.policy.on_evict(evicted)
+        self.resident.append(key)
+        self._set.add(key)
+        self.policy.on_insert(key, now)
+        return evicted
+
+    @property
+    def hit_ratio(self) -> float:
+        t = self.hits + self.misses
+        return self.hits / t if t else 0.0

@@ -1,0 +1,160 @@
+"""Expert Activation Matrices (EAM) and their collection (EAMC) — §4.
+
+An EAM for one sequence is an ``L×E`` count matrix: ``M[l][e]`` = number of
+tokens routed to expert ``e`` of MoE layer ``l`` during the whole generative
+inference of that sequence (prompt + generated tokens). The EAMC is a fixed
+capacity set of representative EAMs chosen by k-means under the paper's
+Eq. (1) distance; it is the prediction database used online by the
+activation-aware prefetcher.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+EAM = np.ndarray  # (L, E) float/int counts
+
+
+def _row_normalize(m: np.ndarray) -> np.ndarray:
+    m = np.asarray(m, np.float64)
+    s = m.sum(axis=1, keepdims=True)
+    out = np.divide(m, s, out=np.zeros_like(m), where=s > 0)
+    return out
+
+
+def eam_distance(m1: np.ndarray, m2: np.ndarray) -> float:
+    """Paper Eq. (1): 1 − mean_l cos(M1[l]/ΣM1[l], M2[l]/ΣM2[l]).
+
+    Rows with zero tokens contribute cosine 0 (maximal distance term); for a
+    partially-filled ``cur_eam`` this is a constant offset over candidates,
+    so the argmin over the EAMC is decided by the observed layers only.
+    Token-count invariance follows from the row normalization.
+    """
+    a, b = _row_normalize(m1), _row_normalize(m2)
+    num = (a * b).sum(axis=1)
+    den = np.linalg.norm(a, axis=1) * np.linalg.norm(b, axis=1)
+    cos = np.divide(num, den, out=np.zeros_like(num), where=den > 0)
+    return float(1.0 - cos.mean())
+
+
+def _distance_matrix(eams: Sequence[np.ndarray]) -> np.ndarray:
+    """Pairwise Eq.(1) distances, vectorized over the collection."""
+    if not len(eams):
+        return np.zeros((0, 0))
+    X = np.stack([_row_normalize(m) for m in eams])        # (N, L, E)
+    norms = np.linalg.norm(X, axis=2)                      # (N, L)
+    num = np.einsum("ale,ble->abl", X, X)
+    den = norms[:, None, :] * norms[None, :, :]
+    cos = np.divide(num, den, out=np.zeros_like(num), where=den > 0)
+    return 1.0 - cos.mean(axis=2)
+
+
+@dataclass
+class EAMC:
+    """Fixed-capacity Expert Activation Matrix Collection (§4.2).
+
+    ``capacity``: P — number of representative EAMs kept.
+    Construction = k-means with Eq.(1) distance; the stored representative of
+    each cluster is the *member* EAM closest to the centroid (the paper keeps
+    real EAMs, not centroids).
+    """
+
+    capacity: int
+    entries: List[np.ndarray] = field(default_factory=list)
+    # distribution-shift handling (§4.3): low-quality sequences are recorded
+    # and folded into the next (re)construction.
+    pending: List[np.ndarray] = field(default_factory=list)
+    history: List[np.ndarray] = field(default_factory=list)
+    seed: int = 0
+
+    # -- construction -------------------------------------------------------
+    def construct(self, eams: Sequence[np.ndarray], iters: int = 25) -> None:
+        """K-means (spherical, Eq.(1) metric) over ``eams``; keeps ≤P reps."""
+        eams = [np.asarray(m, np.float64) for m in eams if np.asarray(m).sum() > 0]
+        self.history = list(eams)
+        if not eams:
+            self.entries = []
+            return
+        if len(eams) <= self.capacity:
+            self.entries = list(eams)
+            return
+        rng = np.random.default_rng(self.seed)
+        X = np.stack([_row_normalize(m) for m in eams])     # (N, L, E)
+        N = len(eams)
+        P = self.capacity
+        # k-means++ style init on the Eq.(1) metric
+        D = _distance_matrix(eams)
+        centers = [int(rng.integers(N))]
+        for _ in range(P - 1):
+            d = np.clip(D[:, centers].min(axis=1), 0.0, None)
+            probs = d / d.sum() if d.sum() > 0 else np.full(N, 1.0 / N)
+            centers.append(int(rng.choice(N, p=probs)))
+        centroids = X[centers].copy()                       # (P, L, E)
+        assign = np.zeros(N, np.int64)
+        for _ in range(iters):
+            # distances to centroids under Eq.(1)
+            cn = np.linalg.norm(centroids, axis=2)          # (P, L)
+            xn = np.linalg.norm(X, axis=2)                  # (N, L)
+            num = np.einsum("nle,ple->npl", X, centroids)
+            den = xn[:, None, :] * cn[None, :, :]
+            cos = np.divide(num, den, out=np.zeros_like(num), where=den > 0)
+            dist = 1.0 - cos.mean(axis=2)                   # (N, P)
+            new_assign = dist.argmin(axis=1)
+            if np.array_equal(new_assign, assign):
+                assign = new_assign
+                break
+            assign = new_assign
+            for p in range(P):
+                members = X[assign == p]
+                if len(members):
+                    centroids[p] = members.mean(axis=0)
+        # representative = member closest to its centroid
+        reps = []
+        for p in range(P):
+            idx = np.where(assign == p)[0]
+            if not len(idx):
+                continue
+            reps.append(eams[int(idx[dist[idx, p].argmin()])])
+        self.entries = reps
+
+    # -- online use -----------------------------------------------------------
+    def _lookup_cache(self):
+        """Precompute row-normalized entries stacked (P, L, E)."""
+        if getattr(self, "_norm_entries", None) is None or \
+                len(getattr(self, "_norm_ids", ())) != len(self.entries) or \
+                any(a is not b for a, b in zip(self._norm_ids, self.entries)):
+            self._norm_entries = np.stack(
+                [_row_normalize(m) for m in self.entries]) \
+                if self.entries else None
+            self._norm_ids = tuple(self.entries)
+            if self._norm_entries is not None:
+                self._norm_norms = np.linalg.norm(self._norm_entries, axis=2)
+        return self._norm_entries
+
+    def lookup(self, cur_eam: np.ndarray) -> tuple[Optional[np.ndarray], float]:
+        """Nearest stored EAM to the in-flight ``cur_eam`` (Alg. 1 steps
+        16-21). Vectorized over the collection — the paper reports 21 us per
+        lookup for 300 entries."""
+        X = self._lookup_cache()
+        if X is None:
+            return None, float("inf")
+        q = _row_normalize(np.asarray(cur_eam, np.float64))   # (L, E)
+        qn = np.linalg.norm(q, axis=1)                        # (L,)
+        num = np.einsum("ple,le->pl", X, q)
+        den = self._norm_norms * qn[None, :]
+        cos = np.divide(num, den, out=np.zeros_like(num), where=den > 0)
+        d = 1.0 - cos.mean(axis=1)                            # (P,)
+        i = int(d.argmin())
+        return self.entries[i], float(d[i])
+
+    # -- drift handling (§4.3) -------------------------------------------------
+    def record_for_reconstruction(self, eam: np.ndarray) -> None:
+        self.pending.append(np.asarray(eam, np.float64))
+
+    def reconstruct(self, max_history: int = 2000) -> None:
+        """Fold pending low-performance sequences into a rebuilt collection."""
+        data = (self.history + self.pending)[-max_history:]
+        self.pending = []
+        self.construct(data)

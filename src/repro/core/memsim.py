@@ -1,0 +1,333 @@
+"""Multi-tier memory & link event simulator.
+
+Models the paper's serving server: experts live on SSD; DRAM and device HBM
+hold caches; one I/O worker per link moves one expert at a time (the paper's
+"dedicated I/O thread per PCIe link", §5.3). The simulator keeps a virtual
+clock in seconds; the serving engine advances it with compute time and the
+links drain their queues in the background.
+
+This is the one deliberately-simulated layer (no PCIe exists on this host) —
+see DESIGN.md §3. Every *policy* decision (what to fetch, what to evict, in
+which order) is executed exactly, not approximated.
+
+Hardware constants default to the paper's 8-GPU server testbed
+(PCIe 4.0 x16 ≈ 25 GB/s effective, NVMe RAID0 ≈ 6 GB/s) with a TPU v5e
+flavour available for the TPU-adapted deployment story.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, Hashable, Optional, Set, Tuple
+
+Key = Hashable  # expert key: (layer_idx, expert_idx)
+
+GPU, DRAM, SSD = "gpu", "dram", "ssd"
+MAX_PRIORITY = float("inf")
+
+
+@dataclass(frozen=True)
+class HWConfig:
+    dram_to_dev_gbps: float = 25.0     # PCIe 4.0 x16 effective
+    ssd_to_dram_gbps: float = 6.0      # NVMe RAID0
+    # compute model (per device)
+    peak_flops: float = 27.8e12        # A5000 fp32 (the paper's testbed)
+    hbm_gbps: float = 768.0            # GDDR6
+
+
+PAPER_8GPU = HWConfig()
+TPU_V5E = HWConfig(dram_to_dev_gbps=32.0, ssd_to_dram_gbps=6.0,
+                   peak_flops=197e12, hbm_gbps=819.0)
+
+
+class Link:
+    """One transfer queue with a single worker (one expert in flight)."""
+
+    def __init__(self, gbps: float):
+        self.gbps = gbps
+        self._heap: list = []
+        self._counter = itertools.count()
+        self._entries: Dict[Key, list] = {}
+        self.busy_until = 0.0
+        self.inflight: Optional[Tuple[Key, float, float, float]] = None
+        # (key, start, end, priority)
+        self.bytes_moved = 0.0
+        self.n_transfers = 0
+
+    # -- queue management (paper §5.3: re-enqueue replaces priority) ---------
+    def submit(self, key: Key, priority: float, size: int,
+               now: float = 0.0) -> None:
+        if key in self._entries:
+            self._entries[key][-1] = None          # invalidate old entry
+        entry = [-priority, next(self._counter), key, size, now, key]
+        self._entries[key] = entry
+        heapq.heappush(self._heap, entry)
+
+    def cancel(self, key: Key) -> None:
+        if key in self._entries:
+            self._entries[key][-1] = None
+            del self._entries[key]
+
+    def _pop(self) -> Optional[Tuple[Key, int, float, float]]:
+        """-> (key, size, priority, available_at)"""
+        while self._heap:
+            neg_p, _, key, size, avail, live = heapq.heappop(self._heap)
+            if live is not None:
+                del self._entries[key]
+                return key, size, -neg_p, avail
+        return None
+
+    def _requeue(self, key: Key, size: int, priority: float,
+                 avail: float) -> None:
+        entry = [-priority, next(self._counter), key, size, avail, key]
+        self._entries[key] = entry
+        heapq.heappush(self._heap, entry)
+
+    def queued(self, key: Key) -> bool:
+        return key in self._entries
+
+    def queue_len(self) -> int:
+        return len(self._entries)
+
+    def clear(self) -> None:
+        """Drop all queued (not in-flight) requests — the prefetch queue is
+        scoped to one inference procedure (Algorithm 1's ``q``)."""
+        for e in self._entries.values():
+            e[-1] = None
+        self._entries.clear()
+
+
+class MemSim:
+    """Event-driven multi-tier memory simulator for one device.
+
+    ``on_arrive(key, tier, now)`` callback lets the offload engine apply its
+    cache-replacement policy when a transfer lands.
+    """
+
+    def __init__(self, hw: HWConfig = PAPER_8GPU, *,
+                 expert_bytes: int, on_arrive=None, admit=None,
+                 demand_overhead: float = 0.0, n_gpu_links: int = 1):
+        self.hw = hw
+        self.expert_bytes = expert_bytes
+        # per-demand-fetch fixed overhead (CUDA-UM baselines pay page-fault
+        # handling per migration batch; 0 for explicit-copy systems)
+        self.demand_overhead = demand_overhead
+        self.clock = 0.0
+        # beyond-paper generalization of §7's per-GPU prefetch threads:
+        # experts stripe deterministically across n parallel DRAM→device
+        # links (a multi-GPU server, or a v5e host's multiple PCIe roots)
+        self.gpu_links = [Link(hw.dram_to_dev_gbps)
+                          for _ in range(max(1, n_gpu_links))]
+        self.ssd_link = Link(hw.ssd_to_dram_gbps)
+        self.on_gpu: Set[Key] = set()
+        self.in_dram: Set[Key] = set()
+        self.on_arrive = on_arrive or (lambda key, tier, now: None)
+        # §6.2: cache replacement is applied BEFORE initiating the copy —
+        # admit(key, tier, priority) may veto a prefetch whose priority does
+        # not beat the would-be victim. Demand fetches are never vetoed.
+        self.admit = admit or (lambda key, tier, priority: True)
+        self._gpu_pending_priority: Dict[Key, float] = {}
+        self.stall_time = 0.0
+        self.demand_fetches = 0
+        self.prefetch_hits = 0
+
+    # -- transfer mechanics ----------------------------------------------------
+    @property
+    def gpu_link(self) -> Link:
+        return self.gpu_links[0]
+
+    def _gpu_for(self, key: Key) -> Link:
+        return self.gpu_links[hash(key) % len(self.gpu_links)]
+
+    def _gpu_inflight(self, key: Key) -> Optional[tuple]:
+        link = self._gpu_for(key)
+        if link.inflight and link.inflight[0] == key:
+            return link.inflight
+        return None
+
+    @property
+    def gpu_bytes_moved(self) -> float:
+        return sum(l.bytes_moved for l in self.gpu_links)
+
+    def _xfer_time(self, link: Link) -> float:
+        return self.expert_bytes / (link.gbps * 1e9)
+
+    def _run_links(self, until: float) -> None:
+        """Drain link work up to virtual time ``until``."""
+        progressed = True
+        while progressed:
+            progressed = False
+            for link, tier in [(self.ssd_link, DRAM)] + \
+                    [(l, GPU) for l in self.gpu_links]:
+                # complete inflight
+                if link.inflight and link.busy_until <= until:
+                    key, _s, _e, pr = link.inflight
+                    link.inflight = None
+                    self._arrive(key, tier, link.busy_until, pr)
+                    progressed = True
+                # start next queued transfer(s)
+                while link.inflight is None and link._heap:
+                    nxt = link._pop()
+                    if nxt is None:
+                        break
+                    key, size, pr, avail = nxt
+                    if self._skip(key, tier):
+                        progressed = True
+                        continue
+                    start = max(link.busy_until, avail)
+                    if start > until:
+                        link._requeue(key, size, pr, avail)
+                        break
+                    if pr < 1e29 and not self.admit(key, tier, pr):
+                        # NOTE: do NOT touch _gpu_pending_priority — it
+                        # belongs to the SSD→DRAM pipeline stage (a demand
+                        # fetch may have raised it).
+                        progressed = True
+                        continue
+                    if tier == GPU and key not in self.in_dram:
+                        # source evicted from DRAM while queued: reroute
+                        # through the SSD tier
+                        self.ssd_link.submit(key, pr, size, now=start)
+                        self._gpu_pending_priority[key] = max(
+                            pr, self._gpu_pending_priority.get(key, 0))
+                        progressed = True
+                        continue
+                    dur = self._xfer_time(link)
+                    link.inflight = (key, start, start + dur, pr)
+                    link.busy_until = start + dur
+                    link.bytes_moved += size
+                    link.n_transfers += 1
+                    progressed = True
+
+    def _skip(self, key: Key, tier: str) -> bool:
+        """Avoid useless copies (§5.3: check allocation before memcpy)."""
+        if tier == GPU:
+            return key in self.on_gpu
+        return key in self.in_dram or key in self.on_gpu
+
+    def _arrive(self, key: Key, tier: str, t: float, priority: float) -> None:
+        if tier == DRAM:
+            self.in_dram.add(key)
+            self.on_arrive(key, DRAM, t)
+            # multi-tier pipelining (§5.3): re-enqueue for DRAM→GPU with the
+            # original priority if it was headed to the device
+            if key in self._gpu_pending_priority:
+                pr = self._gpu_pending_priority.pop(key)
+                self._gpu_for(key).submit(key, pr, self.expert_bytes, now=t)
+        else:
+            self.on_gpu.add(key)
+            self.on_arrive(key, GPU, t)
+
+    # -- public API --------------------------------------------------------------
+    def advance(self, dt: float) -> None:
+        """GPU computes for ``dt`` seconds; background transfers proceed."""
+        target = self.clock + dt
+        self._run_links(target)
+        self.clock = target
+        self._run_links(target)
+
+    def submit_prefetch(self, key: Key, priority: float) -> None:
+        """Route a prefetch to the right link for the expert's current tier."""
+        if key in self.on_gpu or self._gpu_inflight(key):
+            return
+        if key in self.in_dram:
+            self._gpu_for(key).submit(key, priority, self.expert_bytes,
+                                      now=self.clock)
+        else:
+            if self.ssd_link.inflight and self.ssd_link.inflight[0] == key:
+                self._gpu_pending_priority[key] = priority
+                return
+            self.ssd_link.submit(key, priority, self.expert_bytes,
+                                 now=self.clock)
+            self._gpu_pending_priority[key] = priority
+
+    def demand_fetch(self, key: Key) -> float:
+        """Expert needed NOW (Alg. 1 steps 9-12). Returns stall seconds."""
+        self._run_links(self.clock)
+        if key in self.on_gpu:
+            self.prefetch_hits += 1
+            return 0.0
+        self.demand_fetches += 1
+        t0 = self.clock
+        if self.demand_overhead:
+            # fault-handling time passes; background transfers continue
+            self._finish_until(self.clock + self.demand_overhead)
+            self.clock = t0 + self.demand_overhead
+        # if currently in flight to GPU, wait for it
+        infl = self._gpu_inflight(key)
+        if infl:
+            done = infl[2]
+            self._finish_until(done)
+            return max(0.0, done - t0)
+        # jump the queue with MAX_PRIORITY
+        if key in self.in_dram:
+            self._gpu_for(key).submit(key, MAX_PRIORITY, self.expert_bytes,
+                                      now=self.clock)
+        else:
+            if not (self.ssd_link.inflight and self.ssd_link.inflight[0] == key):
+                self.ssd_link.submit(key, MAX_PRIORITY, self.expert_bytes,
+                                     now=self.clock)
+            self._gpu_pending_priority[key] = MAX_PRIORITY
+        guard = 0
+        while key not in self.on_gpu:
+            # self-heal: if the request fell out of every queue (e.g. a veto
+            # race), resubmit on the right link at demand priority
+            tracked = (
+                key in self._gpu_pending_priority
+                or self._gpu_for(key).queued(key) or self.ssd_link.queued(key)
+                or bool(self._gpu_inflight(key))
+                or (self.ssd_link.inflight and self.ssd_link.inflight[0] == key))
+            if not tracked:
+                if key in self.in_dram:
+                    self._gpu_for(key).submit(key, MAX_PRIORITY,
+                                              self.expert_bytes,
+                                              now=self.clock)
+                else:
+                    self.ssd_link.submit(key, MAX_PRIORITY,
+                                         self.expert_bytes, now=self.clock)
+                    self._gpu_pending_priority[key] = MAX_PRIORITY
+            self._step_time()
+            guard += 1
+            if guard > 100000:
+                raise RuntimeError(f"demand fetch of {key} never completed")
+        stall = self.clock - t0
+        self.stall_time += stall
+        return stall
+
+    def _finish_until(self, t: float) -> None:
+        self._run_links(t)
+        self.clock = max(self.clock, t)
+
+    def _step_time(self) -> None:
+        """Advance to the next link completion event."""
+        all_links = [self.ssd_link] + self.gpu_links
+        times = []
+        for link in all_links:
+            if link.inflight:
+                times.append(link.inflight[2])
+        if not times:
+            # nothing in flight: force links to start queued work now
+            self._run_links(self.clock + 1e-9)
+            self.clock += 1e-9
+            for link in all_links:
+                if link.inflight:
+                    times.append(link.inflight[2])
+            if not times:
+                raise RuntimeError("deadlock: nothing queued or in flight")
+        t = min(times)
+        self._run_links(t)
+        self.clock = max(self.clock, t)
+
+    def clear_queues(self) -> None:
+        for l in self.gpu_links:
+            l.clear()
+        self.ssd_link.clear()
+        self._gpu_pending_priority.clear()
+
+    # -- residency management (evictions decided by the cache policy) -----------
+    def evict(self, key: Key, tier: str) -> None:
+        if tier == GPU:
+            self.on_gpu.discard(key)
+        else:
+            self.in_dram.discard(key)

@@ -1,0 +1,240 @@
+"""OffloadEngine — ties tracing, prefetching, caching and the memory
+simulator into the per-layer serving loop (the runtime of Figure 2).
+
+The serving engine calls, for every forward iteration (one generated token)
+and every MoE layer in execution order:
+
+    stall = engine.on_layer(layer_idx, expert_token_counts, compute_time)
+
+which (1) updates cur_eam, (2) refreshes prefetch priorities (Alg. 1 step 8),
+(3) demand-fetches missing activated experts (steps 9-12, MAX_PRIORITY
+queue-jump), (4) applies cache replacement on every arrival (Alg. 2), and
+(5) advances the virtual clock by the layer's compute time.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.cache import (ActivationAwareCache, CachePolicy, ExpertCache,
+                              LFUCache, LRUCache, NeighborAwareCache,
+                              OracleCache)
+from repro.core.eam import EAMC
+from repro.core.memsim import DRAM, GPU, HWConfig, MemSim, PAPER_8GPU
+from repro.core.prefetch import (ActivationAwarePrefetcher, Prefetcher,
+                                 SequenceContext)
+
+Key = Tuple[int, int]
+
+
+@dataclass
+class OffloadConfig:
+    n_moe_layers: int
+    n_experts: int
+    expert_bytes: int
+    gpu_cache_experts: int          # slots in device HBM
+    dram_cache_experts: int         # slots in host memory
+    hw: HWConfig = field(default_factory=lambda: PAPER_8GPU)
+    cache_policy: str = "moe-infinity"   # | lru | lfu | neighbor | oracle
+    prefetch: str = "moe-infinity"       # | none | topk | traced-topk | oracle
+    prefetch_lookahead: int = 0          # 0 = all later layers (paper default)
+    max_inflight_queue: int = 0          # 0 = unbounded
+    demand_overhead_s: float = 0.0       # per-demand fault overhead (UM)
+    n_gpu_links: int = 1                 # parallel DRAM→device links (§7)
+    transfer_bytes_factor: float = 1.0   # <1.0 = quantized transfers
+
+
+class OffloadEngine:
+    def __init__(self, cfg: OffloadConfig, *,
+                 eamc: Optional[EAMC] = None,
+                 prefetcher: Optional[Prefetcher] = None,
+                 cache_policy: Optional[CachePolicy] = None,
+                 oracle_future: Optional[List[Key]] = None):
+        self.cfg = cfg
+        self.ctx = SequenceContext(cfg.n_moe_layers, cfg.n_experts)
+        self.eamc = eamc if eamc is not None else EAMC(capacity=128)
+
+        if prefetcher is not None:
+            self.prefetcher = prefetcher
+        elif cfg.prefetch == "moe-infinity":
+            self.prefetcher = ActivationAwarePrefetcher(self.eamc)
+        else:
+            self.prefetcher = Prefetcher()  # on-demand only
+
+        if cache_policy is not None:
+            gpu_policy: CachePolicy = cache_policy
+        elif cfg.cache_policy == "moe-infinity":
+            gpu_policy = ActivationAwareCache(self.ctx)
+        elif cfg.cache_policy == "lru":
+            gpu_policy = LRUCache()
+        elif cfg.cache_policy == "lfu":
+            gpu_policy = LFUCache()
+        elif cfg.cache_policy == "neighbor":
+            gpu_policy = NeighborAwareCache()
+        elif cfg.cache_policy == "oracle":
+            gpu_policy = OracleCache(oracle_future or [])
+        else:
+            raise ValueError(cfg.cache_policy)
+        self.gpu_cache = ExpertCache(cfg.gpu_cache_experts, gpu_policy)
+        # host-memory tier uses the same policy family (paper §6.2: shared
+        # weight-decay strategy); LRU for baselines
+        self.dram_cache = ExpertCache(
+            cfg.dram_cache_experts,
+            ActivationAwareCache(self.ctx)
+            if cfg.cache_policy == "moe-infinity" else LRUCache())
+
+        self.sim = MemSim(
+            cfg.hw,
+            expert_bytes=int(cfg.expert_bytes * cfg.transfer_bytes_factor),
+            on_arrive=self._on_arrive, admit=self._admit,
+            demand_overhead=cfg.demand_overhead_s,
+            n_gpu_links=cfg.n_gpu_links)
+        self._protected: frozenset = frozenset()
+        self.warm_start()
+
+        # stats
+        self.layer_stalls: List[float] = []
+        self.access_log: List[Key] = []   # expert access order (for Belady)
+        self.ondemand_bytes = 0.0
+        self.prefetch_bytes = 0.0
+
+    # -- initial placement (§6.1: topological fill) -------------------------
+    def warm_start(self) -> None:
+        keys = [(l, e) for l in range(self.cfg.n_moe_layers)
+                for e in range(self.cfg.n_experts)]
+        for k in keys[: self.cfg.gpu_cache_experts]:
+            self.gpu_cache.insert(k)
+            self.sim.on_gpu.add(k)
+        rest = keys[self.cfg.gpu_cache_experts:]
+        for k in rest[: self.cfg.dram_cache_experts]:
+            self.dram_cache.insert(k)
+            self.sim.in_dram.add(k)
+
+    # -- prefetch admission (§6.2: replacement decided before the copy) ------
+    def _admit(self, key: Key, tier: str, priority: float) -> bool:
+        cache = self.gpu_cache if tier == GPU else self.dram_cache
+        if len(cache.resident) < cache.capacity or key in cache._set:
+            return True
+        victim = cache.policy.victim(cache.resident, self._protected)
+        if isinstance(cache.policy, ActivationAwareCache):
+            vscore = cache.policy.scores([victim])[0]
+        else:
+            # baseline policies have no comparable score; admit (their
+            # systems copy unconditionally, which is part of why they lose)
+            return True
+        return priority > vscore
+
+    # -- cache replacement on arrival (Alg. 2 trigger) -----------------------
+    def _on_arrive(self, key: Key, tier: str, now: float) -> None:
+        if tier == GPU:
+            evicted = self.gpu_cache.insert(key, now, self._protected)
+            if evicted is not None:
+                self.sim.evict(evicted, GPU)
+                # demoted experts fall back to the DRAM tier if resident there;
+                # otherwise they are dropped (weights are read-only)
+        else:
+            evicted = self.dram_cache.insert(key, now, self._protected)
+            if evicted is not None:
+                self.sim.evict(evicted, DRAM)
+
+    # -- sequence lifecycle ----------------------------------------------------
+    # The paper traces *per sequence* (§4: separate EAMs; aggregation across
+    # sequences destroys the signal). For a batch of B sequences the engine
+    # keeps B SequenceContexts; prefetch plans are computed per sequence and
+    # merged by max-priority. ``self.ctx`` holds the batch-combined EAM used
+    # by Algorithm 2's cache scoring ("the ongoing generative inference").
+    def start_sequence(self, n_seqs: int = 1) -> None:
+        self.ctx.reset()
+        self.seq_ctxs = [SequenceContext(self.cfg.n_moe_layers,
+                                         self.cfg.n_experts)
+                         for _ in range(n_seqs)]
+        self.sim.clear_queues()
+        if isinstance(self.prefetcher, ActivationAwarePrefetcher):
+            self.prefetcher.start_sequence()
+
+    def end_sequence(self, *, record_drift: bool = False) -> np.ndarray:
+        eam = self.ctx.cur_eam.copy()
+        self.sim.clear_queues()
+        for c in getattr(self, "seq_ctxs", [self.ctx]):
+            self.prefetcher.observe(c)
+        if record_drift:
+            self.eamc.record_for_reconstruction(eam)
+        return eam
+
+    # -- the per-layer hot path (Algorithm 1) -----------------------------------
+    def on_layer(self, layer_idx: int, token_counts: np.ndarray,
+                 compute_time: float) -> float:
+        """``token_counts``: (B, E) or (E,) tokens routed to each expert of
+        this layer this iteration (per live sequence when 2-D). Returns stall
+        seconds spent waiting for experts."""
+        token_counts = np.asarray(token_counts)
+        if token_counts.ndim == 1:
+            token_counts = token_counts[None]
+        if not hasattr(self, "seq_ctxs") or \
+                len(self.seq_ctxs) != token_counts.shape[0]:
+            self.seq_ctxs = [SequenceContext(self.cfg.n_moe_layers,
+                                             self.cfg.n_experts)
+                             for _ in range(token_counts.shape[0])]
+        combined = token_counts.sum(axis=0)
+        self.ctx.update(layer_idx, combined)                # steps 6-7
+
+        # step 8: per-sequence predictions, merged by max priority
+        merged: Dict[Key, float] = {}
+        pred_merged = None
+        for b, c in enumerate(self.seq_ctxs):
+            if token_counts[b].sum() == 0 and c.cur_eam.sum() == 0:
+                continue  # finished / empty slot
+            c.update(layer_idx, token_counts[b])
+            for key, pr in self.prefetcher.plan(c, layer_idx):
+                if self.cfg.prefetch_lookahead and \
+                        key[0] > layer_idx + self.cfg.prefetch_lookahead:
+                    continue
+                if pr > merged.get(key, -1.0):
+                    merged[key] = pr
+            ratios = getattr(self.prefetcher, "last_match_ratios", None)
+            if ratios is not None:
+                pred_merged = (ratios if pred_merged is None
+                               else np.maximum(pred_merged, ratios))
+        # §6.2 alignment: the cache scores see the batch-merged prediction
+        self.ctx.predicted_ratios = pred_merged
+        for key, pr in merged.items():
+            self.sim.submit_prefetch(key, pr)
+
+        # steps 9-12: activated experts must be on device. Enqueue all
+        # missing ones at MAX_PRIORITY first, then wait (minimizes
+        # head-of-line blocking behind an in-flight prefetch).
+        activated = [(layer_idx, int(e)) for e in np.nonzero(combined)[0]]
+        self.access_log.extend(activated)
+        self._protected = frozenset(activated)
+        stall = 0.0
+        missing = []
+        for key in activated:
+            if self.gpu_cache.access(key, self.sim.clock):
+                if key not in self.sim.on_gpu:
+                    self.sim.on_gpu.add(key)
+            else:
+                missing.append(key)
+                self.sim.submit_prefetch(key, 1e30)
+        for key in missing:
+            stall += self.sim.demand_fetch(key)
+            self.dram_cache.access(key, self.sim.clock)
+        self._protected = frozenset()
+
+        # step 13: experts execute
+        self.sim.advance(compute_time)
+        self.layer_stalls.append(stall)
+        return stall
+
+    # -- metrics ------------------------------------------------------------------
+    def stats(self) -> dict:
+        return {
+            "gpu_hit_ratio": self.gpu_cache.hit_ratio,
+            "demand_fetches": self.sim.demand_fetches,
+            "prefetch_hits": self.sim.prefetch_hits,
+            "stall_time": self.sim.stall_time,
+            "pcie_bytes": self.sim.gpu_bytes_moved,
+            "ssd_bytes": self.sim.ssd_link.bytes_moved,
+            "clock": self.sim.clock,
+        }

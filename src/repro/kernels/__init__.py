@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the serving hot spots.
+
+The paper is a policy paper (no GPU kernels), but MoE serving's compute hot
+spots get TPU-native Pallas kernels (DESIGN.md):
+
+- moe_ffn:      grouped expert GEMM with fused (Sw/Ge)GLU — the MoE FFN
+- flash_decode: single-token flash attention over a long KV cache (GQA)
+- wkv6:         RWKV6 data-dependent-decay recurrence (chunked scan)
+
+Each kernel ships as <name>.py (pl.pallas_call + BlockSpec VMEM tiling),
+with a jit'd dispatch wrapper in ops.py and a pure-jnp oracle in ref.py.
+On this CPU container they are validated with interpret=True.
+"""

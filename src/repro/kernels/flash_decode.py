@@ -1,0 +1,97 @@
+"""Single-token flash-attention decode kernel over a long KV cache (GQA).
+
+One generated token's query attends to a KV cache of up to 524k positions
+(the long_500k shape). TPU adaptation:
+
+- Grid (B, Hkv, S/bs): per program, the ``rep = H/Hkv`` query heads that
+  share one KV head attend to one sequence block — the GQA repetition never
+  materializes in memory (a CUDA impl would broadcast K/V across warps; on
+  TPU we instead widen the q block to (rep, hd), an MXU-friendly tile).
+- Online softmax: running (m, l, acc) scratch in VMEM, revisited across the
+  S grid dimension (sequential innermost dim), so the KV cache streams
+  HBM→VMEM exactly once.
+- ``cache_len`` arrives as a scalar-prefetch operand (SMEM); blocks beyond
+  it are masked before the running-max update.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, bs: int, scale: float):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                                   # (rep, hd)
+    k = k_ref[0, :, 0, :]                             # (bs, hd)
+    v = v_ref[0, :, 0, :]                             # (bs, hd)
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    pos = s * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    scores = jnp.where(pos < len_ref[0], scores, NEG_INF)   # (rep, bs)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_cur = jnp.max(scores, axis=-1, keepdims=True)   # (rep, 1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(scores - m_new)                       # (rep, bs)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(s == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def flash_decode(q, k, v, cache_len, *, block_s: int = 512,
+                 interpret: bool = False):
+    """q: (B, H, hd); k/v: (B, S, Hkv, hd); cache_len: int32 scalar (valid
+    prefix length of the cache). -> (B, H, hd)."""
+    B, H, hd = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    assert H % Hkv == 0
+    rep = H // Hkv
+    bs = min(block_s, S)
+    assert S % bs == 0
+    qg = q.reshape(B, Hkv, rep, hd)
+    grid = (B, Hkv, S // bs)
+    scale = hd ** -0.5
+    lens = jnp.asarray(cache_len, jnp.int32).reshape(1)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bs=bs, scale=scale),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, rep, hd), lambda b, h, s, *_: (b, h, 0, 0)),
+                pl.BlockSpec((1, bs, 1, hd), lambda b, h, s, *_: (b, s, h, 0)),
+                pl.BlockSpec((1, bs, 1, hd), lambda b, h, s, *_: (b, s, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, rep, hd),
+                                   lambda b, h, s, *_: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((rep, 1), jnp.float32),    # running max
+                pltpu.VMEM((rep, 1), jnp.float32),    # running denom
+                pltpu.VMEM((rep, hd), jnp.float32),   # output accumulator
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, rep, hd), q.dtype),
+        interpret=interpret,
+    )(lens, qg, k, v)
+    return out.reshape(B, H, hd)

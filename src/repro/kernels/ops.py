@@ -1,0 +1,38 @@
+"""Jit'd dispatch wrappers: kernel on TPU, oracle elsewhere (and a forced
+interpret-mode path for CPU validation)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.flash_decode import flash_decode as _flash_decode
+from repro.kernels.moe_ffn import moe_ffn as _moe_ffn
+from repro.kernels.wkv6 import wkv6 as _wkv6
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def moe_expert_ffn(xg, w_gate, w_up, w_down, *, act: str = "swiglu",
+                   use_kernel: str = "auto", **kw):
+    """Grouped expert FFN. use_kernel: auto | never | interpret | force."""
+    if use_kernel == "never" or (use_kernel == "auto" and not _on_tpu()):
+        return ref.moe_ffn_ref(xg, w_gate, w_up, w_down, act=act)
+    interpret = (use_kernel == "interpret") or not _on_tpu()
+    return _moe_ffn(xg, w_gate, w_up, w_down, act=act,
+                    interpret=interpret, **kw)
+
+
+def decode_attention(q, k, v, cache_len, *, use_kernel: str = "auto", **kw):
+    if use_kernel == "never" or (use_kernel == "auto" and not _on_tpu()):
+        return ref.flash_decode_ref(q, k, v, cache_len)
+    interpret = (use_kernel == "interpret") or not _on_tpu()
+    return _flash_decode(q, k, v, cache_len, interpret=interpret, **kw)
+
+
+def wkv_scan(r, k, v, w, u, s0, *, use_kernel: str = "auto", **kw):
+    if use_kernel == "never" or (use_kernel == "auto" and not _on_tpu()):
+        return ref.wkv6_ref(r, k, v, w, u, s0)
+    interpret = (use_kernel == "interpret") or not _on_tpu()
+    return _wkv6(r, k, v, w, u, s0, interpret=interpret, **kw)

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_ffn_ref(xg, w_gate, w_up, w_down, *, act: str = "swiglu"):
+    """(E, C, d) grouped expert FFN, dense einsum formulation."""
+    up = jnp.einsum("ecd,edf->ecf", xg.astype(jnp.float32),
+                    w_up.astype(jnp.float32))
+    if w_gate is not None:
+        gate = jnp.einsum("ecd,edf->ecf", xg.astype(jnp.float32),
+                          w_gate.astype(jnp.float32))
+        if act == "swiglu":
+            h = jax.nn.silu(gate) * up
+        else:
+            h = jax.nn.gelu(gate, approximate=True) * up
+    elif act == "relu2":
+        h = jnp.square(jax.nn.relu(up))
+    else:
+        h = jax.nn.gelu(up, approximate=True)
+    y = jnp.einsum("ecf,efd->ecd", h.astype(xg.dtype).astype(jnp.float32),
+                   w_down.astype(jnp.float32))
+    return y.astype(xg.dtype)
+
+
+def flash_decode_ref(q, k, v, cache_len):
+    """q: (B, H, hd); k/v: (B, S, Hkv, hd)."""
+    B, H, hd = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    scores = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * hd ** -0.5
+    mask = jnp.arange(S)[None, None, :] < cache_len
+    scores = jnp.where(mask, scores, -1e30)
+    wts = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", wts, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def wkv6_ref(r, k, v, w, u, s0):
+    """Sequential reference recurrence. Shapes as in kernels.wkv6."""
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                       # (BH, hd)
+        a = k_t[..., :, None] * v_t[..., None, :]      # (BH, K, V)
+        o = jnp.einsum("bk,bkv->bv", r_t, s + u[..., None] * a)
+        s = w_t[..., None] * s + a
+        return s, o
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0)
+               for t in (r, k, v, w))
+    sN, out = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(out, 0, 1).astype(r.dtype), sN

@@ -1,0 +1,256 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_DRYRUN_XLA_EXTRA", "")
+                           + " --xla_force_host_platform_device_count="
+                           + os.environ.get("_DRYRUN_DEVICES", "512")).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch × input shape × mesh)
+and capture memory/cost analysis + the collective schedule.
+
+MUST be run as its own process (the XLA_FLAGS device-count override above is
+read at first jax init). Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
+        --shape train_4k [--multi-pod] [--out experiments/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all   # full sweep
+
+Outputs one JSON per combination with:
+  - memory_analysis (bytes per device: args/outputs/temps/generated code)
+  - cost_analysis (flops, bytes accessed)
+  - collective bytes by kind, parsed from the compiled HLO (§Roofline)
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import INPUT_SHAPES
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.launch import roofline
+from repro.launch.input_specs import (decode_inputs, skip_reason,
+                                      supports_shape, train_inputs)
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.launch.sharding import params_shardings
+from repro.models import Model
+from repro.train.optim import OptConfig, adamw_init, adamw_update
+
+
+def _apply_overrides(cfg, overrides):
+    """Apply top-level ArchConfig field overrides ('key=value' strings) —
+    the §Perf hillclimb knob (e.g. moe_dispatch=grouped attn_impl=blocked)."""
+    import dataclasses
+    if not overrides:
+        return cfg
+    repl = {}
+    for ov in overrides:
+        k, v = ov.split("=", 1)
+        cur = getattr(cfg, k)
+        repl[k] = type(cur)(v) if cur is not None else v
+    return dataclasses.replace(cfg, **repl)
+
+
+def build_lowerable(arch_id: str, shape_name: str, mesh, *,
+                    with_optimizer: bool = False, overrides=None,
+                    sharding_mode: str = "auto"):
+    """Returns (fn, example_args) ready for jax.jit(...).lower(*args)."""
+    cfg = _apply_overrides(get_config(arch_id), overrides)
+    if cfg.moe_dispatch == "grouped":
+        from jax.sharding import PartitionSpec as P
+        from repro.launch.mesh import batch_axes
+        from repro.models import moe as moe_mod
+        moe_mod.set_dispatch_constraint(
+            P(batch_axes(mesh), "model", None, None))
+    shape = INPUT_SHAPES[shape_name]
+    model = Model(cfg)
+    pshapes = model.init_shapes()
+    pshard = params_shardings(pshapes, mesh, mode=sharding_mode)
+    params_in = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        pshapes, pshard)
+
+    if shape.kind == "train":
+        batch = train_inputs(cfg, shape, mesh)
+        if with_optimizer:
+            opt_shapes = jax.eval_shape(adamw_init, pshapes)
+            # optimizer moments shard exactly like their parameters
+            opt_shard = {
+                "mu": pshard, "nu": pshard,
+                "step": jax.sharding.NamedSharding(
+                    mesh, jax.sharding.PartitionSpec())}
+            opt_in = jax.tree.map(
+                lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                                   sharding=sh),
+                opt_shapes, opt_shard)
+            ocfg = OptConfig()
+
+            def train_step(params, opt_state, batch):
+                def loss_fn(p):
+                    return model.loss(p, batch, remat=True)
+                loss, grads = jax.value_and_grad(loss_fn)(params)
+                new_p, new_o, gn = adamw_update(ocfg, params, grads, opt_state)
+                return new_p, new_o, loss, gn
+
+            return train_step, (params_in, opt_in, batch)
+
+        def loss_and_grad(params, batch):
+            return jax.value_and_grad(
+                lambda p: model.loss(p, batch, remat=True))(params)
+
+        return loss_and_grad, (params_in, batch)
+
+    if shape.kind == "prefill":
+        batch = train_inputs(cfg, shape, mesh)
+        cache, _tok = decode_inputs(cfg, shape, mesh)
+
+        def prefill(params, batch, cache):
+            logits, cache, _aux = model.prefill(params, batch, cache)
+            return logits, cache
+
+        return prefill, (params_in, batch, cache)
+
+    # decode
+    cache, token = decode_inputs(cfg, shape, mesh)
+    decode_window = 0
+    if shape.name == "long_500k" and cfg.attn.sliding_window:
+        decode_window = cfg.attn.sliding_window
+
+    def serve_step(params, cache, token):
+        logits, cache, _aux = model.serve_step(
+            params, cache, token, decode_window=decode_window)
+        return logits, cache
+
+    return serve_step, (params_in, cache, token)
+
+
+def run_one(arch_id: str, shape_name: str, *, multi_pod: bool,
+            debug_mesh: bool = False, with_optimizer: bool = True,
+            overrides=None, sharding_mode: str = "auto") -> dict:
+    cfg = _apply_overrides(get_config(arch_id), overrides)
+    shape = INPUT_SHAPES[shape_name]
+    mesh_name = ("debug-multi" if multi_pod else "debug") if debug_mesh \
+        else ("2x16x16" if multi_pod else "16x16")
+    rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+           "kind": shape.kind, "status": "ok",
+           "overrides": list(overrides or [])}
+    if not supports_shape(cfg, shape):
+        rec["status"] = "skipped"
+        rec["reason"] = skip_reason(cfg, shape)
+        return rec
+    mesh = (make_debug_mesh(multi_pod=multi_pod) if debug_mesh
+            else make_production_mesh(multi_pod=multi_pod))
+    t0 = time.time()
+    fn, args = build_lowerable(
+        arch_id, shape_name, mesh,
+        with_optimizer=(with_optimizer and shape.kind == "train"),
+        overrides=overrides, sharding_mode=sharding_mode)
+    with mesh:
+        lowered = jax.jit(fn).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    # trip-count-aware analysis: cost_analysis counts while bodies once,
+    # which undercounts scanned-layer models by ~n_layers (see
+    # repro.launch.hlo_analysis)
+    from repro.launch import hlo_analysis
+    hlo_text = compiled.as_text()
+    hlo_dir = os.environ.get("_DRYRUN_HLO_DIR")
+    if hlo_dir:
+        import gzip
+        os.makedirs(hlo_dir, exist_ok=True)
+        tag = f"{arch_id}__{shape_name}__{mesh_name}"
+        with gzip.open(os.path.join(hlo_dir, tag + ".hlo.gz"), "wt") as f:
+            f.write(hlo_text)
+    hcost = hlo_analysis.analyze_hlo(hlo_text)
+    rec.update(
+        cost_corrected={
+            "dot_flops": hcost.dot_flops,
+            "bytes_accessed": hcost.bytes_accessed,
+            "collective_bytes": dict(hcost.collective_bytes),
+            "collective_counts": dict(hcost.collective_counts),
+        },
+        t_lower_s=round(t_lower, 1),
+        t_compile_s=round(t_compile, 1),
+        n_devices=mesh.devices.size,
+        memory={
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+        },
+        cost={"flops": cost.get("flops"),
+              "bytes_accessed": cost.get("bytes accessed")},
+        collectives=roofline.collective_bytes(hlo_text),
+    )
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--debug-mesh", action="store_true",
+                    help="small mesh for CI (set _DRYRUN_DEVICES=8/16)")
+    ap.add_argument("--no-optimizer", action="store_true")
+    ap.add_argument("--set", dest="overrides", action="append", default=[],
+                    help="ArchConfig override key=value (perf variants), "
+                         "e.g. --set moe_dispatch=grouped")
+    ap.add_argument("--sharding", default="auto",
+                    choices=["auto", "dp_only"])
+    ap.add_argument("--tag-suffix", default="",
+                    help="suffix for the output JSON tag (variants)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+
+    combos = []
+    archs = ASSIGNED_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = [False, True] if (args.all or args.both_meshes) \
+        else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                combos.append((a, s, mp))
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for a, s, mp in combos:
+        tag = f"{a}__{s}__{'multi' if mp else 'single'}{args.tag_suffix}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            print(f"[skip] {tag} (cached)")
+            continue
+        print(f"[run ] {tag} ...", flush=True)
+        try:
+            rec = run_one(a, s, multi_pod=mp, debug_mesh=args.debug_mesh,
+                          with_optimizer=not args.no_optimizer,
+                          overrides=args.overrides,
+                          sharding_mode=args.sharding)
+        except Exception as e:  # noqa: BLE001
+            rec = {"arch": a, "shape": s,
+                   "mesh": "multi" if mp else "single",
+                   "status": "error", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+            failures += 1
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[done] {tag}: {rec['status']}"
+              + (f" ({rec.get('t_compile_s', '?')}s compile)"
+                 if rec["status"] == "ok" else
+                 f" — {rec.get('error', rec.get('reason', ''))[:200]}"),
+              flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,305 @@
+"""Trip-count-aware HLO analysis.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE regardless of trip
+count (verified empirically: a 10-iteration scanned matmul reports 1/10th of
+the unrolled FLOPs). Our models are scans over layer groups, so raw numbers
+undercount by ~n_layers. This module parses the *compiled* HLO text into
+computations, extracts while-loop trip counts from their condition
+computations, walks the call graph with multiplicities, and accumulates
+
+  - dot FLOPs (2 · prod(out_dims) · contraction), fusion-internal included,
+  - collective bytes by kind (all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute), per device,
+
+each weighted by how many times its computation actually executes.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*{")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_CALLED = re.compile(r"(?:to_apply|body|condition|calls|"
+                     r"fusion)=\s*%?([\w\.\-]+)")
+_WHILE = re.compile(r"\bwhile\(")
+_WHILE_PARTS = re.compile(r"condition=%?([\w\.\-]+),?\s*body=%?([\w\.\-]+)")
+
+
+def _shape_elems_bytes(shape_str: str) -> Tuple[int, int]:
+    """Total (elements, bytes) over all shapes in the string (tuples ok)."""
+    elems = byts = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+@dataclass
+class Instr:
+    name: str
+    shape_str: str      # result shape(s)
+    op_text: str        # everything after '='
+    called: List[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)  # value -> shape str
+
+
+def parse_module(hlo: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        if cur is None:
+            s = line.strip()
+            # computation headers end with '{' and contain '->'; param lists
+            # may nest parens (tuple types), so split on tokens not regex
+            if s.endswith("{") and "->" in s and not s.startswith("//"):
+                toks = s.split()
+                name_tok = toks[1] if toks[0] == "ENTRY" else toks[0]
+                name = name_tok.lstrip("%").split("(")[0]
+                if name and name not in ("HloModule",):
+                    cur = Computation(name)
+                    if toks[0] == "ENTRY":
+                        entry = name
+                continue
+        else:
+            s = line.strip()
+            if s == "}" or s.startswith("}"):
+                comps[cur.name] = cur
+                cur = None
+                continue
+            m = _INSTR.match(line)
+            if not m:
+                continue
+            name, rhs = m.groups()
+            # result shape = first shape-like prefix of rhs
+            shape_m = re.match(r"(\([^)]*\)|[a-z0-9]+\[[^\]]*\][^\s]*)", rhs)
+            shape_str = shape_m.group(1) if shape_m else ""
+            ins = Instr(name, shape_str, rhs)
+            ins.called = _CALLED.findall(rhs)
+            cur.instrs.append(ins)
+            cur.shapes[name] = shape_str
+    return comps, entry
+
+
+def _trip_count(cond: Computation) -> Optional[int]:
+    """Fallback when backend_config lacks known_trip_count: accept the
+    condition's bound only when it is unambiguous (exactly one positive
+    scalar-int constant). Ambiguous/dynamic loops count once — conservative
+    for flops, and our models' only data-dependent loops (sort passes)
+    contain no dots or collectives."""
+    consts = []
+    for ins in cond.instrs:
+        m = re.search(r"\bconstant\((-?\d+)\)", ins.op_text)
+        if m and ins.shape_str.startswith(("s32[]", "u32[]", "s64[]")):
+            consts.append(int(m.group(1)))
+    cands = sorted({c for c in consts if c > 0})
+    if len(cands) == 1:
+        return cands[0]
+    return None
+
+
+_DOT_DIMS = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_DOT_OPERANDS = re.compile(r"\bdot\(\s*%?([\w\.\-]+),\s*%?([\w\.\-]+)")
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    out_elems, _ = _shape_elems_bytes(ins.shape_str)
+    m = _DOT_OPERANDS.search(ins.op_text)
+    dims_m = _DOT_DIMS.search(ins.op_text)
+    if not m or not dims_m:
+        return 2.0 * out_elems  # unknown contraction; minimal estimate
+    lhs = comp.shapes.get(m.group(1))
+    if lhs is None:
+        return 2.0 * out_elems
+    sm = _SHAPE_RE.search(lhs)
+    if not sm:
+        return 2.0 * out_elems
+    dims = [int(d) for d in sm.group(2).split(",") if d]
+    k = 1
+    for ci in dims_m.group(1).split(","):
+        if ci and int(ci) < len(dims):
+            k *= dims[int(ci)]
+    return 2.0 * out_elems * k
+
+
+@dataclass
+class HLOCosts:
+    dot_flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: Dict[str, float] = field(
+        default_factory=lambda: defaultdict(float))
+    collective_counts: Dict[str, float] = field(
+        default_factory=lambda: defaultdict(float))
+
+
+# ops whose operands/outputs do not move HBM bytes at kernel level
+# (loop-state plumbing is buffer-aliased; matched on the shape-stripped op)
+_NO_BYTES_OPS = (
+    "parameter(", "constant(", "tuple(", "get-tuple-element(", "bitcast(",
+    "while(", "conditional(", "after-all(", "iota(", "partition-id(",
+    "replica-id(", "copy(", "opt-barrier(", "add-dependency(", "domain(",
+)
+
+# ops that read/write only a slice of their (possibly huge) operand —
+# counting the full operand would charge a scan's whole stacked-param
+# buffer once per iteration (observed 700x overcount on Jamba)
+_SLICE_READS = ("dynamic-slice(", "gather(", "slice(")
+_UPDATE_WRITES = ("dynamic-update-slice(", "scatter(")
+
+_CALL_ARGS = re.compile(r"\b[\w\-\.]+\(([^)]*)\)")
+_OPERAND = re.compile(r"%([\w\.\-]+)")
+
+
+def _op_head(t: str) -> str:
+    """Op name + call-open paren, with the (possibly very long tuple-typed)
+    result shape stripped — a 94-way loop-state tuple shape runs hundreds of
+    chars, so prefix slicing would hide the op name."""
+    m = re.match(r"(?:\([^)]*\)|[a-z0-9]+\[[^\]]*\]\S*)\s+(.*)", t, re.S)
+    body = m.group(1) if m else t
+    return body.split(" metadata")[0][:72]
+
+
+def _operands(t: str) -> List[str]:
+    m = _CALL_ARGS.search(t)
+    return _OPERAND.findall(m.group(1)) if m else []
+
+
+def _instr_bytes(ins: Instr, comp: Computation,
+                 comps: Dict[str, Computation]) -> float:
+    """HBM traffic estimate at kernel granularity."""
+    t = ins.op_text
+    head = _op_head(t)
+    for skip in _NO_BYTES_OPS:
+        if skip in head:
+            return 0.0
+    _, out_b = _shape_elems_bytes(ins.shape_str)
+    if any(op in head for op in _SLICE_READS):
+        return 2.0 * out_b                      # read slice + write slice
+    if any(op in head for op in _UPDATE_WRITES):
+        ops = _operands(t)
+        upd = comp.shapes.get(ops[1]) if len(ops) > 1 else None
+        _, ub = _shape_elems_bytes(upd or "")
+        return 2.0 * (ub or out_b)              # read+write the update slab
+    if "fusion(" in head:
+        callee = ins.called[0] if ins.called else None
+        fcomp = comps.get(callee) if callee else None
+        if fcomp is not None:
+            return _fusion_bytes(ins, comp, fcomp)
+    total = float(out_b)
+    for opname in _operands(t):
+        shp = comp.shapes.get(opname)
+        if shp:
+            _, b = _shape_elems_bytes(shp)
+            total += b
+    return total
+
+
+def _fusion_bytes(call: Instr, caller: Computation,
+                  fcomp: Computation) -> float:
+    """One fused kernel: root write + per-parameter reads, where parameters
+    touched only through slice-like ops are charged their sliced bytes."""
+    # map parameter index -> caller operand shape
+    operand_names = _operands(call.op_text)
+    param_names: Dict[str, int] = {}
+    for ins in fcomp.instrs:
+        m = re.search(r"parameter\((\d+)\)", ins.op_text)
+        if m:
+            param_names[ins.name] = int(m.group(1))
+    full_params: set = set()
+    sliced = 0.0
+    for ins in fcomp.instrs:
+        head = _op_head(ins.op_text)
+        ops = _operands(ins.op_text)
+        if any(op in head for op in _SLICE_READS):
+            if ops and ops[0] in param_names:
+                _, ob = _shape_elems_bytes(ins.shape_str)
+                sliced += ob
+                continue
+        if "parameter(" in head:
+            continue
+        for o in ops:
+            if o in param_names:
+                full_params.add(o)
+    reads = sliced
+    for pname in full_params:
+        idx = param_names[pname]
+        if idx < len(operand_names):
+            shp = caller.shapes.get(operand_names[idx])
+            _, b = _shape_elems_bytes(shp or "")
+            reads += b
+    _, out_b = _shape_elems_bytes(call.shape_str)
+    return reads + out_b
+
+
+def analyze_hlo(hlo: str) -> HLOCosts:
+    comps, entry = parse_module(hlo)
+    if entry is None:
+        return HLOCosts()
+    costs = HLOCosts()
+    seen_stack = set()
+
+    def walk(comp_name: str, mult: float, kernel_level: bool) -> None:
+        comp = comps.get(comp_name)
+        if comp is None or comp_name in seen_stack:
+            return
+        seen_stack.add(comp_name)
+        for ins in comp.instrs:
+            text = ins.op_text
+            if " dot(" in text or text.startswith("dot("):
+                costs.dot_flops += mult * _dot_flops(ins, comp)
+            else:
+                for kind in COLLECTIVES:
+                    if re.search(rf"\b{kind}(?:-start)?\(", text):
+                        _, b = _shape_elems_bytes(ins.shape_str)
+                        costs.collective_bytes[kind] += mult * b
+                        costs.collective_counts[kind] += mult
+                        break
+            if kernel_level:
+                costs.bytes_accessed += mult * _instr_bytes(ins, comp, comps)
+            if _WHILE.search(text):
+                wp = _WHILE_PARTS.search(text)
+                if wp:
+                    cond_name, body_name = wp.groups()
+                    # exact: XLA annotates known_trip_count in backend_config
+                    ktc = re.search(
+                        r'known_trip_count[":{\s]+n[":\s]+"?(\d+)', text)
+                    if ktc:
+                        trips = int(ktc.group(1))
+                    else:
+                        trips = _trip_count(comps.get(cond_name,
+                                                      Computation(""))) or 1
+                    walk(body_name, mult * trips, True)
+                continue
+            for callee in ins.called:
+                # fusion/to_apply bodies are one kernel: count their dots &
+                # collectives but not per-instruction bytes
+                walk(callee, mult, False)
+        seen_stack.discard(comp_name)
+
+    walk(entry, 1.0, True)
+    return costs

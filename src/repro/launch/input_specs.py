@@ -1,0 +1,83 @@
+"""ShapeDtypeStruct stand-ins for every model input — shardable,
+weak-type-correct, no device allocation. The dry-run lowers against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ArchConfig, InputShape
+from repro.launch.mesh import batch_axes
+from repro.launch.sharding import cache_shardings
+from repro.models import Model
+
+# archs that may run the 524k decode shape (sub-quadratic decode state);
+# gemma2 runs it in the windowed variant (DESIGN.md §4)
+LONG_CONTEXT_OK = {"rwkv6-7b", "jamba-1.5-large-398b", "gemma2-2b"}
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def supports_shape(cfg: ArchConfig, shape: InputShape) -> bool:
+    if shape.name == "long_500k":
+        return cfg.name in LONG_CONTEXT_OK
+    return True
+
+
+def skip_reason(cfg: ArchConfig, shape: InputShape) -> str:
+    if shape.name == "long_500k" and cfg.name not in LONG_CONTEXT_OK:
+        return ("full-attention KV at 524k is quadratic-cost prefill / "
+                "unbounded KV decode; skipped per DESIGN.md §4")
+    return ""
+
+
+def train_inputs(cfg: ArchConfig, shape: InputShape, mesh):
+    """{tokens} (+ modality stubs) for a train/prefill step."""
+    B, S = shape.global_batch, shape.seq_len
+    bspec = NamedSharding(mesh, P(batch_axes(mesh)))
+    b3 = NamedSharding(mesh, P(batch_axes(mesh), None))
+    batch = {}
+    if cfg.frontend == "vision":
+        batch["embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16,
+                               NamedSharding(mesh, P(batch_axes(mesh), None, None)))
+        batch["positions"] = _sds((3, B, S), jnp.int32,
+                                  NamedSharding(mesh, P(None, batch_axes(mesh), None)))
+        if shape.kind == "train":
+            batch["labels"] = _sds((B, S), jnp.int32, b3)
+    else:
+        batch["tokens"] = _sds((B, S), jnp.int32, b3)
+    if cfg.is_encoder_decoder:
+        batch["enc_embeds"] = _sds((B, cfg.encoder_seq_len, cfg.d_model),
+                                   jnp.bfloat16,
+                                   NamedSharding(mesh, P(batch_axes(mesh), None, None)))
+    del bspec
+    return batch
+
+
+def decode_inputs(cfg: ArchConfig, shape: InputShape, mesh):
+    """(cache, token) stand-ins for serve_step."""
+    model = Model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    decode_window = 0
+    if shape.name == "long_500k" and cfg.attn.sliding_window:
+        decode_window = cfg.attn.sliding_window     # windowed variant
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_cache(B, S, decode_window))
+    shard_seq = B < np.prod([mesh.shape[a] for a in batch_axes(mesh)])
+    shardings = cache_shardings(cache_shapes, mesh, cfg, shard_seq=shard_seq)
+    cache = jax.tree.map(lambda s, sh: _sds(s.shape, s.dtype, sh),
+                         cache_shapes, shardings)
+    tok_spec = (NamedSharding(mesh, P(batch_axes(mesh)))
+                if B % np.prod([mesh.shape[a] for a in batch_axes(mesh)]) == 0
+                else NamedSharding(mesh, P(None)))
+    if cfg.frontend == "vision":
+        token = _sds((B, 1, cfg.d_model), jnp.bfloat16,
+                     NamedSharding(mesh, P(None, None, None)) if B == 1
+                     else NamedSharding(mesh, P(batch_axes(mesh), None, None)))
+    else:
+        token = _sds((B,), jnp.int32, tok_spec)
+    return cache, token

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run must set XLA_FLAGS before first init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) over ("data", "model") — 256 chips (v5e pod).
+    Multi-pod: (2, 16, 16) over ("pod", "data", "model") — 512 chips; the
+    ``pod`` axis composes with ``data`` for batch sharding (DCN-friendly:
+    only data-parallel gradient reductions cross pods)."""
+    if multi_pod:
+        return jax.make_mesh((2, 16, 16), ("pod", "data", "model"))
+    return jax.make_mesh((16, 16), ("data", "model"))
+
+
+def make_debug_mesh(*, multi_pod: bool = False):
+    """Reduced mesh for CI smoke tests (needs only 8/16 host devices)."""
+    if multi_pod:
+        return jax.make_mesh((2, 2, 4), ("pod", "data", "model"))
+    return jax.make_mesh((2, 4), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def axis_size(mesh, name: str) -> int:
+    if name not in mesh.axis_names:
+        return 1
+    return mesh.shape[name]

@@ -1,0 +1,185 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), all in seconds (EXPERIMENTS.md
+§Roofline):
+
+    compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory     = HLO_bytes / (chips × HBM_bw)
+    collective = Σ_kind collective_bytes / (chips × n_links × link_bw)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()`` (already whole-
+program, all devices). Collective bytes are parsed from the compiled HLO
+text: the shaped output of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op (fusion-wrapped instances included).
+
+Hardware constants (TPU v5e flavour): 197 TFLOP/s bf16 per chip, 819 GB/s
+HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from dataclasses import dataclass
+from typing import Dict
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+ICI_LINKS = 4        # v5e: 4 ICI links per chip (2D torus, 2 axes x 2 dirs)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# `%name = (shapes) op-name(` or `%name = shape op-name(`
+_OP_RE = re.compile(
+    r"=\s*(?P<shape>\([^)]*\)|[a-z0-9]+\[[^\]]*\][^ ]*)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(",
+)
+
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, dict]:
+    """Sum output-shape bytes of every collective in the compiled module.
+
+    Bytes are per-device (the HLO is the per-device program post-SPMD);
+    '-start' ops are counted, '-done' ops skipped (same transfer).
+    """
+    out: Dict[str, dict] = {k: {"count": 0, "bytes": 0}
+                            for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        b = _shape_bytes(m.group("shape"))
+        out[op]["count"] += 1
+        out[op]["bytes"] += b
+    return out
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    flops: float
+    bytes_accessed: float
+    collective_bytes_per_dev: float
+    model_flops: float
+    useful_ratio: float
+
+
+def analyze(rec: dict, model_flops: float) -> Roofline:
+    """rec: one dry-run JSON record. model_flops: 6·N·D (or 6·N_active·D).
+
+    Prefers the trip-count-corrected HLO analysis when present (raw
+    cost_analysis counts scan bodies once — see hlo_analysis.py); raw
+    numbers are kept as a fallback for old records. All corrected numbers
+    are per-device (the post-SPMD module is the per-device program), so the
+    compute term divides by per-chip peak only. Memory bytes are scaled by
+    the same multiplicity inflation factor as the FLOPs (documented
+    approximation)."""
+    n_dev = rec["n_devices"]
+    raw_flops = rec["cost"]["flops"] or 0.0
+    byts = rec["cost"]["bytes_accessed"] or 0.0
+    cc = rec.get("cost_corrected")
+    if cc and cc.get("dot_flops"):
+        flops = cc["dot_flops"] * n_dev        # per-device → whole program
+        if cc.get("bytes_accessed"):
+            byts = cc["bytes_accessed"] * n_dev
+        elif raw_flops:
+            byts = byts * (cc["dot_flops"] / max(raw_flops, 1.0)) * n_dev
+        coll = sum(cc["collective_bytes"].values())
+    else:
+        flops = raw_flops
+        coll = sum(v["bytes"] for v in rec["collectives"].values())
+    compute_s = flops / (n_dev * PEAK_FLOPS)
+    memory_s = byts / (n_dev * HBM_BW)
+    collective_s = coll / (ICI_LINKS * ICI_BW)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    useful = model_flops / flops if flops else 0.0
+    return Roofline(compute_s, memory_s, collective_s, dominant,
+                    flops, byts, coll, model_flops, useful)
+
+
+def _attn_context_flops(cfg, S: int, B: int, kind: str) -> float:
+    """Attention O(S·ctx) term (dominant at 32k+ contexts; absent from the
+    6·N·D rule of thumb). 4·ctx·H·hd per token per attention layer
+    (QK^T + PV), window-capped for local layers; MLA uses the latent width.
+    """
+    total = 0.0
+    for i in range(cfg.n_layers):
+        if cfg.block_kind(i) != "attn":
+            continue
+        if cfg.attn.mla is not None:
+            m = cfg.attn.mla
+            width = cfg.n_heads * (m.qk_nope_head_dim + m.qk_rope_head_dim
+                                   + m.v_head_dim) / 2
+        else:
+            width = cfg.n_heads * cfg.head_dim_
+        win = cfg.attn.sliding_window if cfg.is_local_attn_layer(i) else 0
+        if kind == "decode":
+            ctx = min(S, win) if win else S
+            tokens = B                       # one new token per sequence
+        else:
+            ctx = min(S, win) / 2 if win else S / 2   # causal average
+            tokens = B * S
+        total += 4.0 * tokens * ctx * width
+    if cfg.is_encoder_decoder and kind != "decode":
+        Se = cfg.encoder_seq_len
+        width = cfg.n_heads * cfg.head_dim_
+        total += cfg.n_encoder_layers * 4.0 * B * Se * Se * width  # enc self
+        total += cfg.n_layers * 4.0 * B * S * Se * width           # cross
+    return total * (3.0 if kind == "train" else 1.0)
+
+
+def model_flops_for(cfg, shape, kind: str) -> float:
+    """Param term (6·N_active·D train / 2·N_active·D inference) plus the
+    attention context term (see _attn_context_flops)."""
+    n_active = cfg.active_param_count()
+    S, B = shape.seq_len, shape.global_batch
+    if kind == "train":
+        base = 6.0 * n_active * B * S
+    elif kind == "prefill":
+        base = 2.0 * n_active * B * S
+    else:
+        base = 2.0 * n_active * B
+    return base + _attn_context_flops(cfg, S, B, kind)
+
+
+def load_records(dirpath: str):
+    recs = []
+    for fn in sorted(os.listdir(dirpath)):
+        if fn.endswith(".json"):
+            with open(os.path.join(dirpath, fn)) as f:
+                recs.append(json.load(f))
+    return recs

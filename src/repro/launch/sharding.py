@@ -1,0 +1,203 @@
+"""Parameter / activation sharding rules (GSPMD partition specs).
+
+Rules are name-based over the param pytree paths, with divisibility checks
+and replication fallback (GQA head counts smaller than the model axis, tiny
+LoRA ranks, norms). Expert-parallelism: the stacked expert dim of MoE
+weights shards over ``model`` — the paper's cluster deployment mode (§7).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import axis_size, batch_axes
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def param_spec(path: str, shape: tuple, mesh, *, stacked: bool) -> P:
+    """PartitionSpec for one parameter. ``stacked``: leading scan-group dim
+    (never sharded)."""
+    m = axis_size(mesh, "model")
+    lead = (None,) if stacked else ()
+    body = shape[1:] if stacked else shape
+
+    def spec(*axes):
+        return P(*(lead + axes))
+
+    def last_dim(idx_out, idx_in=None):
+        """Column-parallel on idx_out; fall back to row-parallel idx_in."""
+        axes = [None] * len(body)
+        if _div(body[idx_out], m):
+            axes[idx_out] = "model"
+        elif idx_in is not None and _div(body[idx_in], m):
+            axes[idx_in] = "model"
+        return spec(*axes)
+
+    name = path.split("/")[-1]
+    # ---- embeddings / head -------------------------------------------------
+    if name == "embed":
+        return P("model", None) if _div(shape[0], m) else P(None, None)
+    if name == "lm_head":
+        return P(None, "model") if _div(shape[1], m) else P(None, None)
+    if name in ("pos_embed", "enc_pos_embed"):
+        return P(None, None)
+
+    # ---- RWKV (names overlap attention; dispatch on path first) ------------
+    if "rwkv" in path:
+        if name in ("w_r", "w_k", "w_v", "w_g"):     # (d, d): column-parallel
+            return last_dim(1)
+        if name == "w_o":                            # (d, d): row-parallel
+            return last_dim(0)
+        if name == "u":                              # (H, hd)
+            return last_dim(0, 1)
+        if name == "cm_k":                           # (d, F)
+            return last_dim(1)
+        if name == "cm_v":                           # (F, d)
+            return last_dim(0)
+        return spec(*([None] * len(body)))
+
+    # ---- MoE shared expert = dense FFN rules --------------------------------
+    if "shared" in path:
+        if name in ("w_gate", "w_up"):               # (d, f)
+            return last_dim(1)
+        if name == "w_down":                         # (f, d)
+            return last_dim(0)
+        return spec(*([None] * len(body)))
+
+    # ---- MoE experts: expert-parallel on the stacked expert dim -------------
+    if "moe" in path:
+        if name in ("w_gate", "w_up", "w_down"):     # (E, d, f)
+            axes = [None] * len(body)
+            if _div(body[0], m):
+                axes[0] = "model"
+            return spec(*axes)
+        return spec(*([None] * len(body)))           # router etc.
+
+    # ---- attention ----------------------------------------------------------
+    if name in ("w_q", "w_k", "w_v") and len(body) == 3:   # (d, H, hd)
+        return last_dim(1, 2)
+    if name == "w_o" and len(body) == 3:                   # (H, hd, d)
+        return last_dim(0, 1)
+    if name in ("b_q", "b_k", "b_v"):                      # (H, hd)
+        return last_dim(0, 1)
+    if name in ("w_uq", "w_uk", "w_uv"):                   # (r, H, k) MLA
+        return last_dim(1)
+    if name in ("w_dq", "w_dkv", "w_kr"):
+        return spec(*([None] * len(body)))
+
+    # ---- dense FFN -----------------------------------------------------------
+    if name in ("w_gate", "w_up"):                   # (d, f)
+        return last_dim(1)
+    if name == "w_down":                             # (f, d)
+        return last_dim(0)
+
+    # ---- mamba (shard the expanded inner dim) ---------------------------------
+    if name == "w_in":                               # (d, 2*d_in)
+        return last_dim(1)
+    if name == "conv_w":                             # (conv, d_in)
+        return last_dim(1)
+    if name == "w_x_dbc":                            # (d_in, dtr+2N)
+        return last_dim(0)
+    if name == "w_dt":                               # (dtr, d_in)
+        return last_dim(1)
+    if name in ("dt_bias", "D"):                     # (d_in,)
+        return last_dim(0)
+    if name == "A_log":                              # (d_in, N)
+        return last_dim(0)
+    if name == "w_out":                              # (d_in, d)
+        return last_dim(0)
+
+    # ---- everything else (norms, scalars, LoRAs) -------------------------------
+    return spec(*([None] * len(body)))
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def params_shardings(params_shapes: Any, mesh, *, mode: str = "auto") -> Any:
+    """Pytree of NamedShardings matching the params tree (stacked 'blocks'
+    and 'encoder' subtrees get the leading group dim treated as unsharded).
+
+    mode: "auto" — the name-based tensor/expert-parallel rules above;
+          "dp_only" — replicate every parameter (pure data parallelism; the
+          §Perf deployment choice for small models whose TP all-reduces
+          dwarf their compute)."""
+    def one(path, leaf):
+        if mode == "dp_only":
+            return NamedSharding(mesh, P(*([None] * len(leaf.shape))))
+        p = _path_str(path)
+        stacked = p.startswith("blocks/") or p.startswith("encoder/")
+        spec = param_spec(p, leaf.shape, mesh, stacked=stacked)
+        assert len(spec) <= len(leaf.shape), (p, spec, leaf.shape)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+# ---------------------------------------------------------------------------
+# Activation / cache shardings
+# ---------------------------------------------------------------------------
+
+
+def batch_spec(mesh) -> P:
+    return P(batch_axes(mesh))
+
+
+def cache_shardings(cache_shapes: Any, mesh, cfg, *, shard_seq: bool) -> Any:
+    """Decode-cache shardings. ``shard_seq``: context-parallel mode for
+    batch-1 long-context (sequence dim over the batch axes)."""
+    m = axis_size(mesh, "model")
+    baxes = batch_axes(mesh)
+    bsz = int(np.prod([axis_size(mesh, a) for a in baxes]))
+
+    def one(path, leaf):
+        p = _path_str(path)
+        name = p.split("/")[-1]
+        shape = leaf.shape
+        stacked = p.startswith("blocks/")
+        off = 1 if stacked else 0
+        spec = [None] * len(shape)
+        if name == "pos" or len(shape) <= off:
+            return NamedSharding(mesh, P(*spec))
+        if name in ("k", "v", "cross_k", "cross_v"):   # (G?,B,S,kv,hd)
+            if shard_seq and shape[off] < bsz:
+                spec[off + 1] = baxes
+            elif _div(shape[off], bsz):
+                spec[off] = baxes
+            if _div(shape[off + 2], m):
+                spec[off + 2] = "model"
+            elif _div(shape[off + 3], m):
+                spec[off + 3] = "model"
+        elif name in ("ckv", "kr"):                    # (G?,B,S,r)
+            if shard_seq and shape[off] < bsz:
+                spec[off + 1] = baxes
+            elif _div(shape[off], bsz):
+                spec[off] = baxes
+        elif name == "conv":                           # (G?,B,c-1,d_in)
+            if _div(shape[off], bsz):
+                spec[off] = baxes
+            if _div(shape[off + 2], m):
+                spec[off + 2] = "model"
+        elif name == "ssm":                            # (G?,B,d_in,N)
+            if _div(shape[off], bsz):
+                spec[off] = baxes
+            if _div(shape[off + 1], m):
+                spec[off + 1] = "model"
+        elif name == "state":                          # (G?,B,H,K,V)
+            if _div(shape[off], bsz):
+                spec[off] = baxes
+            if _div(shape[off + 1], m):
+                spec[off + 1] = "model"
+        elif name in ("tm", "cm"):                     # (G?,B,d)
+            if _div(shape[off], bsz):
+                spec[off] = baxes
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)

@@ -1,0 +1,77 @@
+"""Training launcher: data-/model-parallel train loop via the production
+sharding rules. On this CPU container it runs reduced configs on a debug
+mesh; the same entry point targets the 16x16 / 2x16x16 meshes on hardware.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-moe-235b-a22b \
+        --reduced --steps 20
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch.sharding import params_shardings
+from repro.models import Model
+from repro.train.checkpoint import save
+from repro.train.data import DataConfig, TokenStream
+from repro.train.optim import OptConfig, adamw_init, adamw_update
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-moe-235b-a22b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--mesh", choices=["none", "debug"], default="none",
+                    help="'debug' shards over a 1xN local mesh")
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = Model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params = model.init(rng)
+    if args.mesh == "debug":
+        n = jax.device_count()
+        mesh = jax.make_mesh((1, n), ("data", "model"))
+        shardings = params_shardings(
+            jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                         params), mesh)
+        params = jax.tree.map(jax.device_put, params, shardings)
+
+    opt_cfg = OptConfig(lr=args.lr, warmup_steps=max(2, args.steps // 10),
+                        total_steps=args.steps)
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step(params, opt, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch, remat=True))(params)
+        params, opt, gn = adamw_update(opt_cfg, params, grads, opt)
+        return params, opt, loss, gn
+
+    data = TokenStream(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                  batch=args.batch))
+    t0 = time.time()
+    for i, batch in enumerate(data.batches(args.steps)):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt, loss, gn = step(params, opt, batch)
+        if i % max(1, args.steps // 10) == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss {float(loss):.4f} gnorm {float(gn):.3f} "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)", flush=True)
+    if args.ckpt:
+        save(args.ckpt, params)
+        print(f"saved params to {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+"""Mamba-1 selective SSM block (Jamba's recurrent layer).
+
+Sequence processing is chunked: a ``lax.scan`` over fixed-size time chunks
+carries the SSM state; within a chunk the recurrence runs as a small inner
+scan. This bounds peak memory to O(chunk · d_in · d_state) instead of
+O(S · d_in · d_state) while keeping HLO size constant — required for the
+524k-token dry-run shapes and the 2-core compile budget.
+
+Decode is a single recurrence step on the carried (conv, ssm) state — O(1) in
+sequence length, which is why Jamba qualifies for ``long_500k``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+
+CHUNK = 256
+
+
+def _dims(cfg: ArchConfig):
+    m = cfg.mamba
+    d_in = m.expand * cfg.d_model
+    dt_rank = m.dt_rank or -(-cfg.d_model // 16)
+    return d_in, dt_rank
+
+
+def init_mamba(rng, cfg: ArchConfig, dtype):
+    m = cfg.mamba
+    d = cfg.d_model
+    d_in, dt_rank = _dims(cfg)
+    ks = jax.random.split(rng, 7)
+    std = d ** -0.5
+    p = {
+        "w_in": (jax.random.normal(ks[0], (d, 2 * d_in)) * std).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (m.d_conv, d_in)) * 0.2).astype(dtype),
+        "w_x_dbc": (jax.random.normal(ks[2], (d_in, dt_rank + 2 * m.d_state))
+                    * d_in ** -0.5).astype(dtype),
+        "w_dt": (jax.random.normal(ks[3], (dt_rank, d_in)) * dt_rank ** -0.5
+                 ).astype(dtype),
+        "dt_bias": jnp.zeros((d_in,), jnp.float32),
+        # S4D-real init: A = -(1..N) per channel
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, m.d_state + 1, dtype=jnp.float32), (d_in, m.d_state))),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "w_out": (jax.random.normal(ks[4], (d_in, d)) * d_in ** -0.5).astype(dtype),
+    }
+    return p
+
+
+def _ssm_params(p, cfg: ArchConfig, xc):
+    """xc (B, L, d_in) post-conv activations -> per-step (dA, dBx, Cmat)."""
+    m = cfg.mamba
+    d_in, dt_rank = _dims(cfg)
+    dbc = xc @ p["w_x_dbc"]
+    dt, Bmat, Cmat = jnp.split(dbc, [dt_rank, dt_rank + m.d_state], axis=-1)
+    dt = jax.nn.softplus(dt @ p["w_dt"] + p["dt_bias"])            # (B,L,d_in)
+    A = -jnp.exp(p["A_log"])                                        # (d_in,N)
+    dA = jnp.exp(dt[..., None] * A)                                 # (B,L,d_in,N)
+    dBx = (dt * xc)[..., None] * Bmat[..., None, :]                 # (B,L,d_in,N)
+    return dA, dBx, Cmat
+
+
+def _scan_chunk(state, dA, dBx, Cmat):
+    """Recurrence h_t = dA_t * h_{t-1} + dBx_t over one chunk (time axis 1)."""
+    def step(h, inp):
+        dA_t, dBx_t, C_t = inp
+        h = dA_t * h + dBx_t
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+    xs = (jnp.moveaxis(dA, 1, 0), jnp.moveaxis(dBx, 1, 0),
+          jnp.moveaxis(Cmat, 1, 0))
+    state, ys = jax.lax.scan(step, state, xs)
+    return state, jnp.moveaxis(ys, 0, 1)                            # (B,L,d_in)
+
+
+def mamba_forward(p, cfg: ArchConfig, x, state=None):
+    """x (B,S,d) -> (y, final_state). S must be a multiple of CHUNK or < CHUNK."""
+    m = cfg.mamba
+    B, S, d = x.shape
+    d_in, _ = _dims(cfg)
+    xz = x @ p["w_in"]
+    xr, z = jnp.split(xz, 2, axis=-1)                               # (B,S,d_in)
+    # causal depthwise conv
+    pad = jnp.zeros((B, m.d_conv - 1, d_in), xr.dtype)
+    xp = jnp.concatenate([pad, xr], axis=1)
+    xc = sum(xp[:, i:i + S] * p["conv_w"][i] for i in range(m.d_conv))
+    xc = jax.nn.silu(xc)
+
+    h0 = jnp.zeros((B, d_in, m.d_state), jnp.float32) if state is None else state
+    if S <= CHUNK:
+        dA, dBx, Cmat = _ssm_params(p, cfg, xc)
+        hN, y = _scan_chunk(h0, dA.astype(jnp.float32),
+                            dBx.astype(jnp.float32), Cmat.astype(jnp.float32))
+    else:
+        assert S % CHUNK == 0, f"seq {S} not divisible by mamba chunk {CHUNK}"
+        xcc = xc.reshape(B, S // CHUNK, CHUNK, d_in)
+
+        def outer(h, xchunk):
+            dA, dBx, Cmat = _ssm_params(p, cfg, xchunk)
+            return _scan_chunk(h, dA.astype(jnp.float32),
+                               dBx.astype(jnp.float32),
+                               Cmat.astype(jnp.float32))
+        hN, y = jax.lax.scan(outer, h0, jnp.moveaxis(xcc, 1, 0))
+        y = jnp.moveaxis(y, 0, 1).reshape(B, S, d_in)
+    y = y.astype(x.dtype) + xr * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["w_out"], hN
+
+
+def mamba_decode(p, cfg: ArchConfig, x, conv_state, ssm_state):
+    """One token. x (B,1,d); conv_state (B,d_conv-1,d_in); ssm (B,d_in,N)."""
+    m = cfg.mamba
+    B = x.shape[0]
+    d_in, _ = _dims(cfg)
+    xz = x[:, 0] @ p["w_in"]
+    xr, z = jnp.split(xz, 2, axis=-1)                               # (B,d_in)
+    window = jnp.concatenate([conv_state, xr[:, None]], axis=1)     # (B,conv,d_in)
+    xc = jnp.einsum("bcd,cd->bd", window, p["conv_w"])
+    xc = jax.nn.silu(xc)
+    dA, dBx, Cmat = _ssm_params(p, cfg, xc[:, None])
+    h = dA[:, 0].astype(jnp.float32) * ssm_state + dBx[:, 0].astype(jnp.float32)
+    y = jnp.einsum("bdn,bn->bd", h, Cmat[:, 0].astype(jnp.float32))
+    y = y.astype(x.dtype) + xr * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return (y @ p["w_out"])[:, None], window[:, 1:], h

@@ -1,0 +1,249 @@
+"""Routed mixture-of-experts FFN.
+
+Dispatch is sort+gather based (GShard-style capacity bound, but without the
+O(T·E·C) one-hot dispatch tensors): tokens are flattened, their (token, expert)
+assignments sorted by expert, capacity-clipped, gathered into dense per-expert
+blocks ``(E, C, d)`` and processed by a grouped GEMM. Compute is therefore
+proportional to *active* experts (``T·k·d·f``), which keeps the roofline's
+MODEL_FLOPS / HLO_FLOPs ratio honest.
+
+Expert weights are stored stacked ``(E, d, f)`` so that (a) expert parallelism
+is one PartitionSpec on the leading axis and (b) the serving engine's offload
+store can move one ``E``-slice per fetch (the paper's per-expert I/O fusion).
+
+Per-sequence expert activation counts — the paper's EAM rows — fall out of
+routing for free and are returned as aux.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig, MoEConfig
+from repro.models.layers import activation, init_ffn, apply_ffn, is_gated
+
+
+# Optional PartitionSpecs for the grouped dispatch intermediates, set by the
+# launcher (jit-traced model code cannot name mesh axes itself):
+#   xg / yg (B, E, C, d)  — typically P(batch_axes, "model", None, None)
+_DISPATCH_CONSTRAINT = None
+
+
+def set_dispatch_constraint(spec) -> None:
+    """Launcher hook: force the grouped-dispatch per-expert blocks to stay
+    batch-sharded (GSPMD otherwise replicates the expert GEMMs across the
+    data axis — the §Perf finding: 16x per-device waste on a 16x16 mesh)."""
+    global _DISPATCH_CONSTRAINT
+    _DISPATCH_CONSTRAINT = spec
+
+
+def init_moe(rng, cfg: ArchConfig, dtype):
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(rng, 5)
+    std = d ** -0.5
+    p = {
+        "w_router": (jax.random.normal(ks[0], (d, m.n_experts)) * std
+                     ).astype(jnp.float32),
+        "w_up": (jax.random.normal(ks[2], (m.n_experts, d, m.d_expert)) * std
+                 ).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (m.n_experts, m.d_expert, d))
+                   * m.d_expert ** -0.5).astype(dtype),
+    }
+    if is_gated(cfg.act):
+        p["w_gate"] = (jax.random.normal(ks[1], (m.n_experts, d, m.d_expert))
+                       * std).astype(dtype)
+    if m.n_shared_experts:
+        d_sh = (m.d_shared or m.d_expert) * m.n_shared_experts
+        p["shared"] = init_ffn(ks[4], cfg, d_sh, dtype)
+    return p
+
+
+def capacity(T: int, m: MoEConfig, factor: float | None = None) -> int:
+    f = m.capacity_factor if factor is None else factor
+    c = int(T * m.top_k / m.n_experts * f) + 1
+    return max(m.top_k, min(c, T))
+
+
+def route(p, m: MoEConfig, xf):
+    """xf (T, d) -> (gates (T,k), idx (T,k), probs (T,E))."""
+    logits = (xf.astype(jnp.float32) @ p["w_router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, m.top_k)
+    if m.router_norm_topk:
+        gates = gates / (jnp.sum(gates, axis=-1, keepdims=True) + 1e-9)
+    return gates, idx, probs
+
+
+def moe_ffn(p, cfg: ArchConfig, x, *, capacity_factor: float | None = None,
+            expert_fn=None):
+    """Apply the routed MoE to x (B, S, d).
+
+    Returns (y, aux) where aux = {"counts": (B, E) int32 per-sequence expert
+    activation counts (an EAM row), "aux_loss": load-balance loss scalar}.
+    ``expert_fn``: optional override for the grouped expert computation with
+    signature (xg (E,C,d), p) -> (E,C,d) — the Pallas kernel hook.
+    """
+    if cfg.moe_dispatch == "grouped" and x.shape[0] > 1:
+        return moe_ffn_grouped(p, cfg, x, capacity_factor=capacity_factor,
+                               expert_fn=expert_fn)
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    xf = x.reshape(T, d)
+    gates, idx, probs = route(p, m, xf)                     # (T,k) (T,k) (T,E)
+    C = capacity(T, m, capacity_factor)
+    E, k = m.n_experts, m.top_k
+
+    flat_e = idx.reshape(T * k)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]                                 # (T*k,)
+    token_of = order // k
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    pos_in_e = jnp.arange(T * k) - seg_start[sorted_e]
+    keep = pos_in_e < C
+    slot = sorted_e * C + jnp.minimum(pos_in_e, C - 1)       # (T*k,)
+
+    # token index feeding each (E*C) slot; T = "no token" sentinel.
+    # Dropped (over-capacity) entries scatter to index E*C, discarded by
+    # mode="drop" — they must not clobber a real slot.
+    slot_idx = jnp.where(keep, slot, E * C)
+    slot_token = jnp.full((E * C,), T, jnp.int32)
+    slot_token = slot_token.at[slot_idx].set(token_of.astype(jnp.int32),
+                                             mode="drop")
+    x_pad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)], axis=0)
+    xg = x_pad[slot_token].reshape(E, C, d)
+
+    if expert_fn is not None:
+        yg = expert_fn(xg, p)
+    else:
+        yg = grouped_expert_ffn(xg, p, cfg.act)
+    yg = yg.reshape(E * C, d)
+
+    gate_flat = gates.reshape(T * k)[order]
+    slot_gate = jnp.zeros((E * C,), gates.dtype).at[slot_idx].set(
+        gate_flat, mode="drop")
+    contrib = yg * slot_gate[:, None].astype(yg.dtype)
+    y = jax.ops.segment_sum(contrib, slot_token, num_segments=T + 1)[:T]
+    y = y.reshape(B, S, d).astype(x.dtype)
+
+    if m.n_shared_experts:
+        y = y + apply_ffn(p["shared"], x, cfg.act)
+
+    # --- aux: per-sequence expert counts (EAM row) + load-balance loss
+    one_hot = jax.nn.one_hot(idx.reshape(B, S * k), E, dtype=jnp.int32)
+    counts = one_hot.sum(axis=1)                             # (B, E)
+    frac_tokens = counts.sum(axis=0).astype(jnp.float32) / (T * k)
+    frac_probs = probs.mean(axis=0)
+    aux_loss = m.aux_loss_coef * E * jnp.sum(frac_tokens * frac_probs)
+    return y, {"counts": counts, "aux_loss": aux_loss}
+
+
+def moe_ffn_grouped(p, cfg: ArchConfig, x, *,
+                    capacity_factor: float | None = None, expert_fn=None):
+    """Per-sequence-group dispatch (GShard grouping, G = batch).
+
+    The group dim stays sharded on the batch/data mesh axes end-to-end, so
+    each data shard dispatches only its own tokens: per-device expert
+    compute is E_local × G_local × C_g instead of E_local × C_global — the
+    §Perf fix for the data-replicated expert compute of the global dispatch
+    (16× per-device dot-flops reduction on the 16×16 mesh).
+
+    Capacity is per group (C_g = S·k/E·f): slightly higher drop variance
+    than the global bound at equal factor — the classic GShard trade.
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    E, k = m.n_experts, m.top_k
+    gates, idx, probs = route(p, m, x.reshape(B * S, d))
+    gates = gates.reshape(B, S, k)
+    idx = idx.reshape(B, S, k)
+    C = capacity(S, m, capacity_factor)
+
+    flat_e = idx.reshape(B, S * k)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)           # (B, S·k)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    token_of = order // k                                        # (B, S·k)
+    seg_start = jax.vmap(
+        lambda se: jnp.searchsorted(se, jnp.arange(E), side="left"))(sorted_e)
+    pos_in_e = jnp.arange(S * k) - jnp.take_along_axis(
+        seg_start, sorted_e, axis=-1)
+    keep = pos_in_e < C
+    slot = sorted_e * C + jnp.minimum(pos_in_e, C - 1)
+    slot_idx = jnp.where(keep, slot, E * C)                     # OOB = drop
+
+    def scatter_tokens(slot_idx_b, token_of_b):
+        st = jnp.full((E * C,), S, jnp.int32)
+        return st.at[slot_idx_b].set(token_of_b.astype(jnp.int32),
+                                     mode="drop")
+    slot_token = jax.vmap(scatter_tokens)(slot_idx, token_of)   # (B, E·C)
+    x_pad = jnp.concatenate([x, jnp.zeros((B, 1, d), x.dtype)], axis=1)
+    xg = jnp.take_along_axis(
+        x_pad, slot_token[..., None], axis=1).reshape(B, E, C, d)
+    if _DISPATCH_CONSTRAINT is not None:
+        xg = jax.lax.with_sharding_constraint(xg, _DISPATCH_CONSTRAINT)
+
+    if expert_fn is not None:
+        yg = jax.vmap(lambda g: expert_fn(g, p))(xg)
+    else:
+        act = activation(cfg.act)
+        up = jnp.einsum("becd,edf->becf", xg, p["w_up"])
+        if "w_gate" in p:
+            h = act(jnp.einsum("becd,edf->becf", xg, p["w_gate"])) * up
+        else:
+            h = act(up)
+        yg = jnp.einsum("becf,efd->becd", h, p["w_down"])
+    yg = yg.reshape(B, E * C, d)
+
+    gate_flat = jnp.take_along_axis(gates.reshape(B, S * k), order, axis=-1)
+    slot_gate = jax.vmap(
+        lambda si, gf: jnp.zeros((E * C,), gates.dtype).at[si].set(
+            gf, mode="drop"))(slot_idx, gate_flat)
+    contrib = yg * slot_gate[..., None].astype(yg.dtype)
+    y = jax.vmap(lambda c, st: jax.ops.segment_sum(
+        c, st, num_segments=S + 1)[:S])(contrib, slot_token)
+    y = y.astype(x.dtype)
+
+    if m.n_shared_experts:
+        y = y + apply_ffn(p["shared"], x, cfg.act)
+
+    one_hot = jax.nn.one_hot(idx.reshape(B, S * k), E, dtype=jnp.int32)
+    counts = one_hot.sum(axis=1)
+    frac_tokens = counts.sum(axis=0).astype(jnp.float32) / (B * S * k)
+    frac_probs = probs.mean(axis=0)
+    aux_loss = m.aux_loss_coef * E * jnp.sum(frac_tokens * frac_probs)
+    return y, {"counts": counts, "aux_loss": aux_loss}
+
+
+def grouped_expert_ffn(xg, p, act_name: str):
+    """(E, C, d) -> (E, C, d) grouped GEMM expert FFN (pure-jnp path)."""
+    act = activation(act_name)
+    up = jnp.einsum("ecd,edf->ecf", xg, p["w_up"])
+    if "w_gate" in p:
+        h = act(jnp.einsum("ecd,edf->ecf", xg, p["w_gate"])) * up
+    else:
+        h = act(up)
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+
+
+def moe_ffn_dense_oracle(p, cfg: ArchConfig, x):
+    """O(T·E) dense-mask reference used by tests (computes every expert on
+    every token, then masks). Numerically identical modulo capacity drops."""
+    m = cfg.moe
+    B, S, d = x.shape
+    xf = x.reshape(B * S, d)
+    gates, idx, _ = route(p, m, xf)
+    act = activation(cfg.act)
+    up = jnp.einsum("td,edf->tef", xf, p["w_up"])
+    if "w_gate" in p:
+        h = act(jnp.einsum("td,edf->tef", xf, p["w_gate"])) * up
+    else:
+        h = act(up)
+    ye = jnp.einsum("tef,efd->ted", h, p["w_down"])          # (T,E,d)
+    w = jnp.zeros((B * S, m.n_experts), ye.dtype)
+    for j in range(m.top_k):
+        w = w.at[jnp.arange(B * S), idx[:, j]].add(gates[:, j].astype(ye.dtype))
+    y = jnp.einsum("ted,te->td", ye, w).reshape(B, S, d)
+    if m.n_shared_experts:
+        y = y + apply_ffn(p["shared"], x, cfg.act)
+    return y.astype(x.dtype)

@@ -1,0 +1,134 @@
+"""RWKV6 "Finch" block: time-mix with data-dependent decay + channel-mix.
+
+The recurrence per head (state S ∈ R^{K×V}):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    o_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+with w_t = exp(-exp(w0 + LoRA(x_t))) data-dependent per channel — the Finch
+novelty vs RWKV5's static decay. Sequence processing scans over time in
+chunks (same memory rationale as mamba.py); decode carries (state, shift)
+and is O(1) in sequence length.
+
+Simplifications vs the reference checkpoint (documented in DESIGN.md): the
+five token-shift mix coefficients use one shared LoRA-free mix per projection
+(r/k/v/g/w), and gating uses silu instead of the released lerp-of-lora
+schedule. The state recurrence — what the systems contribution cares about —
+is exact.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+
+CHUNK = 256
+
+
+def init_rwkv(rng, cfg: ArchConfig, dtype):
+    r = cfg.rwkv
+    d = cfg.d_model
+    H = d // r.head_dim
+    ks = jax.random.split(rng, 10)
+    std = d ** -0.5
+    p = {
+        "mix": jnp.full((5, d), 0.5, jnp.float32),   # r,k,v,g,w token-shift mix
+        "w_r": (jax.random.normal(ks[0], (d, d)) * std).astype(dtype),
+        "w_k": (jax.random.normal(ks[1], (d, d)) * std).astype(dtype),
+        "w_v": (jax.random.normal(ks[2], (d, d)) * std).astype(dtype),
+        "w_g": (jax.random.normal(ks[3], (d, d)) * std).astype(dtype),
+        "w_o": (jax.random.normal(ks[4], (d, d)) * std).astype(dtype),
+        "decay_base": jnp.zeros((d,), jnp.float32) - 0.5,
+        "decay_A": (jax.random.normal(ks[5], (d, r.decay_lora)) * std
+                    ).astype(dtype),
+        "decay_B": (jax.random.normal(ks[6], (r.decay_lora, d))
+                    * r.decay_lora ** -0.5).astype(dtype),
+        "u": jnp.zeros((H, r.head_dim), jnp.float32),  # bonus for current token
+        # channel mix
+        "cm_mix": jnp.full((d,), 0.5, jnp.float32),
+        "cm_k": (jax.random.normal(ks[7], (d, cfg.d_ff)) * std).astype(dtype),
+        "cm_v": (jax.random.normal(ks[8], (cfg.d_ff, d))
+                 * cfg.d_ff ** -0.5).astype(dtype),
+    }
+    return p
+
+
+def _mix(x, x_prev, coef):
+    coef = coef.astype(x.dtype)
+    return x * coef + x_prev * (jnp.asarray(1.0, x.dtype) - coef)
+
+
+def _projections(p, cfg: ArchConfig, x, x_shift):
+    """x, x_shift (B,L,d) -> per-head r,k,v,g,w tensors (B,L,H,hd)."""
+    r_cfg = cfg.rwkv
+    d = cfg.d_model
+    H = d // r_cfg.head_dim
+    def heads(t):
+        return t.reshape(t.shape[0], t.shape[1], H, r_cfg.head_dim)
+    r = heads(_mix(x, x_shift, p["mix"][0]) @ p["w_r"])
+    k = heads(_mix(x, x_shift, p["mix"][1]) @ p["w_k"])
+    v = heads(_mix(x, x_shift, p["mix"][2]) @ p["w_v"])
+    g = _mix(x, x_shift, p["mix"][3]) @ p["w_g"]
+    xw = _mix(x, x_shift, p["mix"][4])
+    w_log = p["decay_base"] + (jnp.tanh(xw @ p["decay_A"]) @ p["decay_B"]
+                               ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_log))                          # (B,L,d) in (0,1)
+    return r, k, v, g, heads(w)
+
+
+def _wkv_chunk(state, r, k, v, w, u):
+    """Sequential recurrence over one chunk. state (B,H,K,V); r/k/v/w
+    (B,L,H,hd); u (H,hd). Returns (state, out (B,L,H,hd))."""
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                          # (B,H,hd)
+        a_t = k_t[..., :, None] * v_t[..., None, :]       # (B,H,K,V)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[..., None] * a_t)
+        s = w_t[..., None] * s + a_t
+        return s, out
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, w))
+    state, out = jax.lax.scan(step, state, xs)
+    return state, jnp.moveaxis(out, 0, 1)                 # (B,L,H,hd)
+
+
+def rwkv_time_mix(p, cfg: ArchConfig, x, state=None, x_prev=None):
+    """x (B,S,d). Returns (y, (state, last_x))."""
+    r_cfg = cfg.rwkv
+    B, S, d = x.shape
+    H = d // r_cfg.head_dim
+    if x_prev is None:
+        x_prev = jnp.zeros((B, d), x.dtype)
+    x_shift = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    r, k, v, g, w = _projections(p, cfg, x, x_shift)
+    s0 = (jnp.zeros((B, H, r_cfg.head_dim, r_cfg.head_dim), jnp.float32)
+          if state is None else state)
+    u = p["u"]
+    if S <= CHUNK:
+        sN, out = _wkv_chunk(s0, r, k, v, w, u)
+    else:
+        assert S % CHUNK == 0, f"seq {S} not divisible by rwkv chunk {CHUNK}"
+        def outer(s, inp):
+            return _wkv_chunk(s, *inp, u)
+        xs = tuple(jnp.moveaxis(t.reshape(B, S // CHUNK, CHUNK, H, -1), 1, 0)
+                   for t in (r, k, v, w))
+        sN, out = jax.lax.scan(outer, s0, xs)
+        out = jnp.moveaxis(out, 0, 1).reshape(B, S, H, -1)
+    y = out.reshape(B, S, d).astype(x.dtype) * jax.nn.silu(g)
+    return y @ p["w_o"], (sN, x[:, -1])
+
+
+def rwkv_channel_mix(p, cfg: ArchConfig, x, x_prev=None):
+    """Squared-relu channel mix with token shift. Returns (y, last_x)."""
+    B, S, d = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((B, d), x.dtype)
+    x_shift = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    xk = _mix(x, x_shift, p["cm_mix"])
+    h = jnp.square(jax.nn.relu(xk @ p["cm_k"]))
+    return h @ p["cm_v"], x[:, -1]
+
+
+def rwkv_decode(p, cfg: ArchConfig, x, state, x_prev_tm, x_prev_cm):
+    """One token through time-mix + channel-mix. x (B,1,d)."""
+    y_tm, (state, last_tm) = rwkv_time_mix(p, cfg, x, state, x_prev_tm)
+    x2 = x + y_tm
+    y_cm, last_cm = rwkv_channel_mix(p, cfg, x2, x_prev_cm)
+    return x2 + y_cm, state, last_tm, last_cm

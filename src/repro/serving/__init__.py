@@ -1,0 +1,4 @@
+from repro.serving.engine import ServingEngine, EngineConfig  # noqa: F401
+from repro.serving.scheduler import Scheduler, SchedulerConfig  # noqa: F401
+from repro.serving.workload import (  # noqa: F401
+    WorkloadConfig, make_dataset, poisson_arrivals, azure_like_arrivals)

@@ -1,0 +1,331 @@
+"""The serving engine: batched generative inference with activation-aware
+expert offloading (Figure 2's runtime).
+
+Two routing sources share one code path:
+
+* **model mode** — a real JAX model (`repro.models.Model`) runs prefill +
+  per-token decode; router decisions come from ``aux["counts"]``. Used by
+  the examples, tests and small benchmarks.
+* **trace mode** — a synthetic :class:`RoutingOracle` supplies per-task
+  expert-routing distributions without touching JAX. Used by the large
+  benchmark sweeps (30-minute Azure-style replays would be infeasible with
+  per-token JAX dispatch on 2 CPU cores).
+
+Per forward iteration the engine walks MoE layers in execution order,
+feeding the OffloadEngine (Algorithm 1/2) and advancing the virtual clock by
+the perf-model compute time; per-token latency = compute + expert stalls,
+end-to-end latency additionally includes batching/queueing delay.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.config import ArchConfig
+from repro.core.eam import EAMC
+from repro.core.memsim import HWConfig, PAPER_8GPU
+from repro.core.offload import OffloadConfig, OffloadEngine
+from repro.core.tracer import SequenceTracer
+from repro.serving.perf_model import expert_bytes, layer_cost, layer_time
+from repro.serving.request import Batch, Request
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+
+
+# ---------------------------------------------------------------------------
+# Synthetic routing oracle (trace mode)
+# ---------------------------------------------------------------------------
+
+
+class RoutingOracle:
+    """Task-conditioned expert routing with temporal locality.
+
+    Each (task, layer) has a Dirichlet-concentrated distribution over
+    experts; all tokens of a sequence route from that distribution, so a
+    sequence reuses few experts (sparse activation + temporal locality),
+    while different tasks use different experts — the structure EAMC mines.
+    """
+
+    def __init__(self, n_layers: int, n_experts: int, n_tasks: int,
+                 top_k: int = 1, concentration: float = 0.05, seed: int = 7):
+        rng = np.random.default_rng(seed)
+        self.top_k = top_k
+        self.n_layers, self.n_experts = n_layers, n_experts
+        self.dist = rng.dirichlet(np.full(n_experts, concentration),
+                                  size=(n_tasks, n_layers))
+
+    def route_tokens(self, task: int, n_tokens: int, rng) -> np.ndarray:
+        """-> (L, E) token counts for one iteration of one sequence."""
+        out = np.zeros((self.n_layers, self.n_experts), np.int64)
+        for l in range(self.n_layers):
+            for _ in range(self.top_k):
+                out[l] += rng.multinomial(n_tokens, self.dist[task, l])
+        return out
+
+
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class EngineConfig:
+    arch: ArchConfig
+    gpu_cache_experts: int
+    dram_cache_experts: int
+    hw: HWConfig = field(default_factory=lambda: PAPER_8GPU)
+    cache_policy: str = "moe-infinity"
+    prefetch: str = "moe-infinity"
+    scheduler: SchedulerConfig = field(default_factory=SchedulerConfig)
+    bytes_per_param: int = 2
+    record_drift: bool = False
+    demand_overhead_s: float = 0.0   # UM-style per-fault handling overhead
+    n_gpu_links: int = 1             # parallel DRAM→device links
+    transfer_bytes_factor: float = 1.0  # <1 = quantized expert transfers
+
+
+class ServingEngine:
+    def __init__(self, cfg: EngineConfig, *, eamc: Optional[EAMC] = None,
+                 oracle: Optional[RoutingOracle] = None,
+                 model=None, params=None, seed: int = 0,
+                 prefetcher=None, cache_policy=None):
+        self.cfg = cfg
+        arch = cfg.arch
+        self.moe_layers = [i for i in range(arch.n_layers)
+                           if arch.is_moe_layer(i)]
+        self.n_moe = len(self.moe_layers)
+        self.oracle = oracle
+        self.model = model
+        self.params = params
+        self.rng = np.random.default_rng(seed)
+        ocfg = OffloadConfig(
+            n_moe_layers=self.n_moe,
+            n_experts=arch.moe.n_experts,
+            expert_bytes=expert_bytes(arch, cfg.bytes_per_param),
+            gpu_cache_experts=cfg.gpu_cache_experts,
+            dram_cache_experts=cfg.dram_cache_experts,
+            hw=cfg.hw,
+            cache_policy=cfg.cache_policy,
+            prefetch=cfg.prefetch,
+            demand_overhead_s=cfg.demand_overhead_s,
+            n_gpu_links=cfg.n_gpu_links,
+            transfer_bytes_factor=cfg.transfer_bytes_factor,
+        )
+        self.offload = OffloadEngine(ocfg, eamc=eamc, prefetcher=prefetcher,
+                                     cache_policy=cache_policy)
+        self.tracer = SequenceTracer(self.n_moe, arch.moe.n_experts)
+        self._costs = {i: layer_cost(arch, i, cfg.bytes_per_param)
+                       for i in range(arch.n_layers)}
+        self.token_latencies: List[float] = []
+        self.iter_log: List[dict] = []
+
+    # -- compute-time helpers -------------------------------------------------
+    def _iter_time_dense(self, n_tokens: int, ctx: int) -> float:
+        """Non-MoE layers' compute for one iteration (experts excluded)."""
+        t = 0.0
+        for i, c in self._costs.items():
+            if self.cfg.arch.is_moe_layer(i):
+                continue
+            t += layer_time(c, self.cfg.hw, n_tokens, ctx)
+        return t
+
+    def _moe_layer_time(self, layer_idx: int, n_tokens: int, ctx: int,
+                        expert_tokens: float) -> float:
+        return layer_time(self._costs[layer_idx], self.cfg.hw, n_tokens, ctx,
+                          expert_tokens)
+
+    # -- routing ----------------------------------------------------------------
+    def _route_iteration(self, batch: Batch, n_tokens_per_req: Dict[int, int]
+                         ) -> np.ndarray:
+        """-> counts (n_moe, B, E) for one forward iteration."""
+        E = self.cfg.arch.moe.n_experts
+        out = np.zeros((self.n_moe, batch.size, E), np.int64)
+        for b, r in enumerate(batch.requests):
+            n = n_tokens_per_req.get(r.rid, 0)
+            if n <= 0:
+                continue
+            out[:, b, :] = self.oracle.route_tokens(r.task_id, n, self.rng)
+        return out
+
+    # -- main loop ---------------------------------------------------------------
+    def run(self, requests: List[Request], *, max_iters: int = 10_000
+            ) -> List[Request]:
+        sched = Scheduler(self.cfg.scheduler, requests)
+        sim = self.offload.sim
+        while not sched.done():
+            batch = sched.next_batch(sim.clock)
+            if batch is None:
+                break
+            # jump virtual time forward to the batch launch
+            if batch.t_formed > sim.clock:
+                sim.advance(batch.t_formed - sim.clock)
+            self._run_batch(batch)
+        return requests
+
+    def _run_batch(self, batch: Batch) -> None:
+        sim = self.offload.sim
+        arch = self.cfg.arch
+        self.offload.start_sequence(n_seqs=batch.size)
+        for r in batch.requests:
+            r.t_sched = sim.clock
+            self.tracer.start(r.rid)
+
+        # ---- prefill iteration (all prompt tokens)
+        prompt_tokens = {r.rid: len(r.prompt) for r in batch.requests}
+        counts = self._route_iteration(batch, prompt_tokens)
+        total_prompt = sum(prompt_tokens.values())
+        ctx = max(len(r.prompt) for r in batch.requests)
+        self._execute_iteration(batch, counts, total_prompt, ctx)
+        for r in batch.requests:
+            r.t_first = sim.clock
+            r.n_generated = 1
+        self.tracer.record_step([r.rid for r in batch.requests],
+                                counts)
+
+        # ---- decode iterations
+        live = {r.rid: r for r in batch.requests}
+        it = 1
+        while live:
+            decode_tokens = {rid: 1 for rid in live}
+            counts = self._route_iteration(batch, decode_tokens)
+            self._execute_iteration(batch, counts, len(live), ctx + it)
+            self.tracer.record_step(
+                [r.rid if r.rid in live else None for r in batch.requests],
+                counts)
+            done = []
+            for rid, r in live.items():
+                r.n_generated += 1
+                if r.n_generated >= r.max_new_tokens:
+                    r.t_done = self.offload.sim.clock
+                    done.append(rid)
+            for rid in done:
+                del live[rid]
+            it += 1
+            if it > 10_000:
+                raise RuntimeError("runaway generation")
+        for r in batch.requests:
+            eam = self.tracer.finish(r.rid)
+            if self.cfg.record_drift and eam is not None:
+                self.eamc_record(eam)
+        self.offload.end_sequence()
+
+    def eamc_record(self, eam: np.ndarray) -> None:
+        self.offload.eamc.record_for_reconstruction(eam)
+
+    def _execute_iteration(self, batch: Batch, counts: np.ndarray,
+                           n_tokens: int, ctx: int) -> None:
+        """One forward pass: walk layers in order, offload-aware."""
+        sim = self.offload.sim
+        t0 = sim.clock
+        # dense layers run between MoE layers; amortize their compute evenly
+        # across MoE layer boundaries to keep the event loop per-MoE-layer
+        dense_t = self._iter_time_dense(n_tokens, ctx)
+        slices = max(1, self.n_moe)
+        for li, layer_idx in enumerate(self.moe_layers):
+            sim.advance(dense_t / slices)
+            comp = self._moe_layer_time(layer_idx, n_tokens, ctx,
+                                        float(counts[li].sum()))
+            self.offload.on_layer(li, counts[li], comp)
+        if not self.n_moe:
+            sim.advance(dense_t)
+        self.token_latencies.append(sim.clock - t0)
+        self.iter_log.append({"t": sim.clock, "n_tokens": n_tokens,
+                              "lat": sim.clock - t0})
+
+    # -- metrics ---------------------------------------------------------------
+    def stats(self) -> dict:
+        s = self.offload.stats()
+        lat = np.array(self.token_latencies)
+        if len(lat):
+            s.update(mean_token_latency=float(lat.mean()),
+                     p50=float(np.percentile(lat, 50)),
+                     p99=float(np.percentile(lat, 99)))
+        return s
+
+
+# ---------------------------------------------------------------------------
+# Real-model serving (model mode)
+# ---------------------------------------------------------------------------
+
+
+class JaxModelServer:
+    """Batched generative serving of a real JAX model with the offload
+    engine in the loop. Router decisions are the model's actual top-k
+    choices; latency accounting (compute + expert stalls) uses the same
+    virtual clock as trace mode.
+
+    Prompts in one call share a length (the scheduler pads batches by
+    construction in the examples); sampling is greedy.
+    """
+
+    def __init__(self, cfg: EngineConfig, model, params, *,
+                 eamc: Optional[EAMC] = None, seed: int = 0):
+        import jax
+
+        self.cfg = cfg
+        self.model = model
+        self.params = params
+        arch = cfg.arch
+        self.moe_layer_ids = [i for i in range(arch.n_layers)
+                              if arch.is_moe_layer(i)]
+        self.n_moe = len(self.moe_layer_ids)
+        ocfg = OffloadConfig(
+            n_moe_layers=self.n_moe,
+            n_experts=arch.moe.n_experts,
+            expert_bytes=expert_bytes(arch, cfg.bytes_per_param),
+            gpu_cache_experts=cfg.gpu_cache_experts,
+            dram_cache_experts=cfg.dram_cache_experts,
+            hw=cfg.hw, cache_policy=cfg.cache_policy, prefetch=cfg.prefetch)
+        self.offload = OffloadEngine(ocfg, eamc=eamc)
+        self.tracer = SequenceTracer(self.n_moe, arch.moe.n_experts)
+        self._costs = {i: layer_cost(arch, i, cfg.bytes_per_param)
+                       for i in range(arch.n_layers)}
+        self._prefill = jax.jit(
+            lambda p, b, c: model.prefill(p, b, c))
+        self._step = jax.jit(
+            lambda p, c, t: model.serve_step(p, c, t))
+        self.token_latencies: List[float] = []
+
+    def _account(self, counts: np.ndarray, n_tokens: int, ctx: int) -> None:
+        sim = self.offload.sim
+        t0 = sim.clock
+        dense_t = sum(
+            layer_time(c, self.cfg.hw, n_tokens, ctx)
+            for i, c in self._costs.items()
+            if not self.cfg.arch.is_moe_layer(i))
+        for li in range(self.n_moe):
+            sim.advance(dense_t / max(1, self.n_moe))
+            comp = layer_time(self._costs[self.moe_layer_ids[li]],
+                              self.cfg.hw, n_tokens, ctx,
+                              float(counts[li].sum()))
+            self.offload.on_layer(li, counts[li], comp)
+        self.token_latencies.append(sim.clock - t0)
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int):
+        """prompts: (B, S) int32. Returns (generated (B, max_new), stats)."""
+        import jax.numpy as jnp
+
+        B, S = prompts.shape
+        self.offload.start_sequence()
+        for b in range(B):
+            self.tracer.start(b)
+        cache = self.model.init_cache(B, S + max_new_tokens)
+        logits, cache, aux = self._prefill(self.params,
+                                           {"tokens": jnp.asarray(prompts)},
+                                           cache)
+        counts = np.asarray(aux["counts"])
+        self._account(counts, B * S, S)
+        self.tracer.record_step(list(range(B)), counts)
+        out = []
+        tok = jnp.argmax(logits, axis=-1)
+        for t in range(max_new_tokens):
+            out.append(np.asarray(tok))
+            logits, cache, aux = self._step(self.params, cache, tok)
+            counts = np.asarray(aux["counts"])
+            self._account(counts, B, S + t + 1)
+            self.tracer.record_step(list(range(B)), counts)
+            tok = jnp.argmax(logits, axis=-1)
+        eams = [self.tracer.finish(b) for b in range(B)]
+        self.offload.end_sequence()
+        stats = dict(self.offload.stats(),
+                     mean_token_latency=float(np.mean(self.token_latencies)))
+        return np.stack(out, axis=1), {"eams": eams, **stats}

@@ -1,0 +1,42 @@
+"""Inference request / batch types."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    arrival: float                 # seconds
+    prompt: np.ndarray             # (S,) int32 token ids
+    max_new_tokens: int
+    task_id: int = 0               # which synthetic dataset/task produced it
+    # filled by the engine
+    t_sched: float = 0.0           # when the batch started executing
+    t_first: float = 0.0           # first-token time
+    t_done: float = 0.0
+    n_generated: int = 0
+
+    @property
+    def latency(self) -> float:
+        """Per-request end-to-end latency (the paper reports per-token
+        forward latency; we track both)."""
+        return self.t_done - self.arrival
+
+    @property
+    def per_token_latency(self) -> float:
+        n = max(1, self.n_generated)
+        return (self.t_done - self.t_sched) / n
+
+
+@dataclass
+class Batch:
+    requests: List[Request] = field(default_factory=list)
+    t_formed: float = 0.0
+
+    @property
+    def size(self) -> int:
+        return len(self.requests)

@@ -1,0 +1,55 @@
+"""Request scheduler: AlpaServe-style batching (max batch 16 OR 1 s wait).
+
+Pure event logic over arrival timestamps — the engine asks for the next
+batch given the current virtual time.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+from repro.serving.request import Batch, Request
+
+
+@dataclass
+class SchedulerConfig:
+    max_batch: int = 16
+    max_wait: float = 1.0
+
+
+class Scheduler:
+    def __init__(self, cfg: SchedulerConfig, requests: List[Request]):
+        self.cfg = cfg
+        self.pending = sorted(requests, key=lambda r: r.arrival)
+        self.cursor = 0
+
+    def done(self) -> bool:
+        return self.cursor >= len(self.pending)
+
+    def next_batch(self, now: float) -> Optional[Batch]:
+        """Form the next batch. ``now`` = engine's current virtual time (it
+        may be behind the next arrival; we then jump forward)."""
+        if self.done():
+            return None
+        first = self.pending[self.cursor]
+        start = max(now, first.arrival)
+        deadline = first.arrival + self.cfg.max_wait
+        batch = Batch(t_formed=start)
+        i = self.cursor
+        while i < len(self.pending) and len(batch.requests) < self.cfg.max_batch:
+            r = self.pending[i]
+            # requests that have arrived by the time the batch must launch
+            if r.arrival <= max(start, deadline):
+                batch.requests.append(r)
+                i += 1
+            else:
+                break
+        # launch when full, else at the waiting deadline (if still waiting)
+        if len(batch.requests) >= self.cfg.max_batch:
+            t_launch = max(start, batch.requests[-1].arrival)
+        else:
+            t_launch = max(start, min(deadline,
+                                      max(r.arrival for r in batch.requests)))
+        batch.t_formed = t_launch
+        self.cursor = i
+        return batch

@@ -1,0 +1,2 @@
+from repro.train.optim import adamw_init, adamw_update, OptConfig  # noqa: F401
+from repro.train.loop import TrainState, make_train_step, train_loop  # noqa: F401

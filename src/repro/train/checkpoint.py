@@ -1,0 +1,37 @@
+"""Flat-npz checkpointing for arbitrary param pytrees (host-sharded
+friendly: each host saves its local shard file; restore merges)."""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def restore(path: str, like: Any) -> Any:
+    data = np.load(path)
+    leaves_paths = jax.tree_util.tree_flatten_with_path(like)
+    flat, treedef = jax.tree_util.tree_flatten(like)
+    out = []
+    for (path_keys, leaf) in leaves_paths[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_keys)
+        arr = data[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        out.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

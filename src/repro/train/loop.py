@@ -1,0 +1,54 @@
+"""Training loop: jit'd train_step (loss = LM + MoE aux) + host loop."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model
+from repro.train.optim import OptConfig, adamw_init, adamw_update
+
+
+@dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    step: int = 0
+
+
+def make_train_step(model: Model, opt_cfg: OptConfig, *, remat: bool = True,
+                    capacity_factor: Optional[float] = None) -> Callable:
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return model.loss(p, batch, remat=remat,
+                              capacity_factor=capacity_factor)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new_params, new_opt, gnorm = adamw_update(opt_cfg, params, grads,
+                                                  opt_state)
+        return new_params, new_opt, loss, gnorm
+    return jax.jit(train_step, donate_argnums=(0, 1))
+
+
+def train_loop(model: Model, data_iter, opt_cfg: OptConfig, *,
+               rng=None, n_steps: int = 100, log_every: int = 10,
+               params=None, verbose: bool = True):
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    params = params if params is not None else model.init(rng)
+    opt_state = adamw_init(params)
+    step_fn = make_train_step(model, opt_cfg)
+    losses = []
+    t0 = time.time()
+    for i, batch in enumerate(data_iter):
+        if i >= n_steps:
+            break
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt_state, loss, gnorm = step_fn(params, opt_state, batch)
+        losses.append(float(loss))
+        if verbose and (i % log_every == 0 or i == n_steps - 1):
+            print(f"step {i:5d} loss {float(loss):8.4f} "
+                  f"gnorm {float(gnorm):7.3f} "
+                  f"({(time.time() - t0) / (i + 1):.2f}s/step)")
+    return TrainState(params=params, opt=opt_state, step=len(losses)), losses

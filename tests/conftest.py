@@ -1,0 +1,13 @@
+import os
+
+# Tests run on the single real CPU device; the dry-run's 512-device override
+# must NOT leak here (it runs in its own subprocess).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,144 @@
+"""EAM / EAMC unit + property tests (paper §4, Eq. 1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.eam import EAMC, eam_distance, _row_normalize
+
+
+def _rand_eam(rng, L=4, E=8, scale=10):
+    return rng.integers(0, scale, size=(L, E)).astype(np.float64)
+
+
+# ---------------------------------------------------------------------------
+# Eq. (1) distance properties
+# ---------------------------------------------------------------------------
+
+@st.composite
+def eams(draw, L=4, E=8):
+    data = draw(st.lists(st.integers(0, 20), min_size=L * E, max_size=L * E))
+    return np.array(data, np.float64).reshape(L, E)
+
+
+@given(eams())
+@settings(max_examples=50, deadline=None)
+def test_distance_identity(m):
+    if m.sum() == 0:
+        return
+    d = eam_distance(m, m)
+    rows_nonzero = (m.sum(axis=1) > 0).mean()
+    # identical matrices: distance = fraction of all-zero rows
+    assert d == pytest.approx(1.0 - rows_nonzero, abs=1e-9)
+
+
+@given(eams(), eams())
+@settings(max_examples=50, deadline=None)
+def test_distance_symmetric_and_bounded(m1, m2):
+    d12 = eam_distance(m1, m2)
+    d21 = eam_distance(m2, m1)
+    assert d12 == pytest.approx(d21, abs=1e-12)
+    assert -1e-9 <= d12 <= 2.0  # cosine of nonneg vectors ∈ [0,1] → d ∈ [0,1]
+    assert d12 <= 1.0 + 1e-9
+
+
+@given(eams(), st.integers(2, 7))
+@settings(max_examples=50, deadline=None)
+def test_distance_token_count_invariance(m, k):
+    """Paper requirement (ii): independent of the number of tokens."""
+    d = eam_distance(m, k * m)
+    rows_nonzero = (m.sum(axis=1) > 0).mean()
+    assert d == pytest.approx(1.0 - rows_nonzero, abs=1e-9)
+
+
+def test_distance_orthogonal_is_one():
+    m1 = np.array([[4.0, 0.0], [0.0, 4.0]])
+    m3 = np.array([[0.0, 4.0], [4.0, 0.0]])
+    assert eam_distance(m1, m3) == pytest.approx(1.0)
+
+
+def test_row_normalize_zero_rows():
+    m = np.zeros((3, 4))
+    m[0, 1] = 2
+    n = _row_normalize(m)
+    assert n[0].sum() == pytest.approx(1.0)
+    assert (n[1:] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# EAMC construction
+# ---------------------------------------------------------------------------
+
+def test_eamc_members_are_input_eams(rng):
+    eams_in = [_rand_eam(rng) + 1 for _ in range(40)]
+    c = EAMC(capacity=5)
+    c.construct(eams_in)
+    assert 0 < len(c.entries) <= 5
+    ids = [id(m) for m in eams_in]
+    for e in c.entries:
+        assert any(np.array_equal(e, m) for m in eams_in), \
+            "EAMC must store member EAMs, not centroids"
+    del ids
+
+
+def test_eamc_capacity_not_exceeded(rng):
+    eams_in = [_rand_eam(rng) + 1 for _ in range(100)]
+    c = EAMC(capacity=7)
+    c.construct(eams_in)
+    assert len(c.entries) <= 7
+
+
+def test_eamc_small_input_kept_verbatim(rng):
+    eams_in = [_rand_eam(rng) + 1 for _ in range(3)]
+    c = EAMC(capacity=10)
+    c.construct(eams_in)
+    assert len(c.entries) == 3
+
+
+def test_eamc_clusters_tasks(rng):
+    """Distinct task patterns should each be represented."""
+    bases = [np.zeros((4, 8)) for _ in range(3)]
+    for t, b in enumerate(bases):
+        b[:, t * 2] = 10.0
+    eams_in = []
+    for i in range(60):
+        eams_in.append(bases[i % 3] + rng.poisson(0.2, (4, 8)))
+    c = EAMC(capacity=3)
+    c.construct(eams_in)
+    assert len(c.entries) == 3
+    # each stored EAM should be near one distinct base
+    assigned = set()
+    for e in c.entries:
+        dists = [eam_distance(e, b) for b in bases]
+        assigned.add(int(np.argmin(dists)))
+    assert assigned == {0, 1, 2}
+
+
+def test_eamc_lookup_finds_matching_task(rng):
+    bases = [np.zeros((4, 8)) for _ in range(3)]
+    for t, b in enumerate(bases):
+        b[:, t * 2 : t * 2 + 2] = 10.0
+    eams_in = [bases[i % 3] + rng.poisson(0.2, (4, 8)) for i in range(60)]
+    c = EAMC(capacity=6)
+    c.construct(eams_in)
+    # partial cur_eam of task 1 (first layer only)
+    cur = np.zeros((4, 8))
+    cur[0] = bases[1][0]
+    best, d = c.lookup(cur)
+    assert best is not None
+    assert eam_distance(best, bases[1]) < min(
+        eam_distance(best, bases[0]), eam_distance(best, bases[2]))
+
+
+def test_eamc_reconstruction_drift(rng):
+    """§4.3: after drift, reconstruction folds pending sequences in."""
+    base_a = np.zeros((4, 8)); base_a[:, 0] = 10
+    base_b = np.zeros((4, 8)); base_b[:, 5] = 10
+    c = EAMC(capacity=4)
+    c.construct([base_a + rng.poisson(0.2, (4, 8)) for _ in range(20)])
+    cur = base_b.copy()
+    _, d_before = c.lookup(cur)
+    for _ in range(12):
+        c.record_for_reconstruction(base_b + rng.poisson(0.2, (4, 8)))
+    c.reconstruct()
+    _, d_after = c.lookup(cur)
+    assert d_after < d_before

@@ -1,0 +1,104 @@
+"""Offload engine integration: Algorithm 1+2 wired to the simulator, and the
+real-JAX-model serving path (JaxModelServer)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.eam import EAMC, eam_distance
+from repro.core.offload import OffloadConfig, OffloadEngine
+from repro.models import Model
+from repro.serving import EngineConfig
+from repro.serving.engine import JaxModelServer
+
+L, E = 4, 8
+
+
+def _engine(**kw):
+    cfg = OffloadConfig(n_moe_layers=L, n_experts=E, expert_bytes=10_000_000,
+                        gpu_cache_experts=8, dram_cache_experts=16, **kw)
+    return OffloadEngine(cfg)
+
+
+def test_warm_start_topological():
+    eng = _engine()
+    assert (0, 0) in eng.gpu_cache and (0, 7) in eng.gpu_cache
+    assert (1, 0) not in eng.gpu_cache  # 8 slots = exactly layer 0
+    assert (1, 0) in eng.dram_cache and (1, 1) in eng.dram_cache
+
+
+def test_on_layer_updates_cur_eam_and_stalls():
+    eng = _engine()
+    eng.start_sequence()
+    counts = np.zeros(E); counts[5] = 3
+    stall = eng.on_layer(2, counts, compute_time=1e-4)
+    assert eng.ctx.cur_eam[2, 5] == 3
+    assert stall > 0  # (2,5) starts on dram/ssd
+    # second time it's cached
+    stall2 = eng.on_layer(2, counts, compute_time=1e-4)
+    assert stall2 == 0.0
+
+
+def test_per_sequence_contexts_merge():
+    eng = _engine()
+    eng.start_sequence(n_seqs=2)
+    counts = np.zeros((2, E))
+    counts[0, 1] = 4
+    counts[1, 6] = 2
+    eng.on_layer(0, counts, 1e-4)
+    assert eng.seq_ctxs[0].cur_eam[0, 1] == 4
+    assert eng.seq_ctxs[1].cur_eam[0, 6] == 2
+    assert eng.ctx.cur_eam[0, 1] == 4 and eng.ctx.cur_eam[0, 6] == 2
+
+
+def test_end_sequence_returns_eam_and_clears_queues():
+    eng = _engine()
+    eng.start_sequence()
+    counts = np.zeros(E); counts[0] = 2
+    eng.on_layer(1, counts, 1e-4)
+    eam = eng.end_sequence()
+    assert eam[1, 0] == 2
+    assert eng.sim.gpu_link.queue_len() == 0
+    assert eng.sim.ssd_link.queue_len() == 0
+
+
+def test_prefetch_reduces_first_touch_stall():
+    """With a perfectly-matching EAMC entry, later layers' experts should be
+    prefetched during earlier layers' compute."""
+    pattern = np.zeros((L, E))
+    pattern[:, 3] = 10
+    eamc = EAMC(capacity=2)
+    eamc.construct([pattern])
+
+    def run(prefetch):
+        cfg = OffloadConfig(n_moe_layers=L, n_experts=E,
+                            expert_bytes=10_000_000, gpu_cache_experts=4,
+                            dram_cache_experts=32, prefetch=prefetch)
+        eng = OffloadEngine(cfg, eamc=eamc)
+        eng.start_sequence()
+        total = 0.0
+        counts = np.zeros(E); counts[3] = 10
+        for l in range(L):
+            total += eng.on_layer(l, counts, compute_time=5e-3)
+        return total
+
+    assert run("moe-infinity") < run("none")
+
+
+def test_jax_model_server_generates_and_traces():
+    arch = get_config("qwen3-moe-235b-a22b").reduced()
+    model = Model(arch)
+    params = model.init(jax.random.PRNGKey(0))
+    ecfg = EngineConfig(arch=arch, gpu_cache_experts=4, dram_cache_experts=8)
+    srv = JaxModelServer(ecfg, model, params)
+    prompts = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, arch.vocab))
+    out, stats = srv.generate(prompts, max_new_tokens=4)
+    assert out.shape == (2, 4)
+    assert len(stats["eams"]) == 2
+    n_moe = len(model.moe_layers)
+    for eam in stats["eams"]:
+        assert eam.shape == (n_moe, arch.moe.n_experts)
+        # (prompt 8 tokens + 4 decode steps) × top_k, per MoE layer
+        assert eam.sum() == (8 + 4) * arch.moe.top_k * n_moe
+    assert stats["mean_token_latency"] > 0

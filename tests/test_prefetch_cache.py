@@ -1,0 +1,198 @@
+"""Algorithm 1 (prefetch priorities) and Algorithm 2 (cache replacement)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache import (ActivationAwareCache, EPSILON, ExpertCache,
+                              LFUCache, LRUCache, NeighborAwareCache,
+                              OracleCache)
+from repro.core.eam import EAMC
+from repro.core.prefetch import (ActivationAwarePrefetcher, SequenceContext,
+                                 TopKPrefetcher, TracedTopKPrefetcher,
+                                 prediction_accuracy)
+
+L, E = 4, 8
+
+
+def _ctx():
+    return SequenceContext(L, E)
+
+
+def _eamc_single(eam):
+    c = EAMC(capacity=4)
+    c.construct([eam])
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1
+# ---------------------------------------------------------------------------
+
+def test_priority_formula_exact():
+    """p = (ratio + eps) * (1 - fl/L), only layers after cur_l (steps 22-27)."""
+    eam = np.zeros((L, E))
+    eam[1, 2] = 3; eam[1, 3] = 1
+    eam[2, 5] = 4
+    pf = ActivationAwarePrefetcher(_eamc_single(eam))
+    ctx = _ctx()
+    ctx.update(0, np.ones(E))  # some layer-0 activity
+    plan = dict(pf.plan(ctx, cur_layer=0))
+    assert (1, 2) in plan and (1, 3) in plan and (2, 5) in plan
+    assert plan[(1, 2)] == pytest.approx((0.75 + 1e-4) * (1 - 1 / L))
+    assert plan[(1, 3)] == pytest.approx((0.25 + 1e-4) * (1 - 1 / L))
+    assert plan[(2, 5)] == pytest.approx((1.0 + 1e-4) * (1 - 2 / L))
+    # nothing for the current or earlier layers
+    assert not any(k[0] <= 0 for k in plan)
+
+
+def test_priority_layer_decay_orders_same_ratio():
+    eam = np.zeros((L, E))
+    eam[1, 0] = 5
+    eam[2, 0] = 5
+    eam[3, 0] = 5
+    pf = ActivationAwarePrefetcher(_eamc_single(eam))
+    ctx = _ctx(); ctx.update(0, np.ones(E))
+    plan = dict(pf.plan(ctx, cur_layer=0))
+    assert plan[(1, 0)] > plan[(2, 0)] > plan[(3, 0)]
+
+
+def test_refinement_vs_oneshot():
+    """§8.3 ablation: refinement updates the match as cur_eam fills."""
+    a = np.zeros((L, E)); a[:, 0] = 10
+    b = np.zeros((L, E)); b[:, 7] = 10; b[0, 0] = 10  # b looks like a at l0
+    c = EAMC(capacity=4); c.construct([a, b])
+    pf = ActivationAwarePrefetcher(c, refine=True)
+    ctx = _ctx()
+    ctx.update(0, a[0])  # ambiguous at layer 0
+    pf.plan(ctx, 0)
+    ctx.update(1, b[1])  # now clearly task b
+    plan = dict(pf.plan(ctx, 1))
+    assert (2, 7) in plan and plan[(2, 7)] > 0.5 * (1 - 2 / L)
+
+    pf1 = ActivationAwarePrefetcher(c, refine=False)
+    pf1.start_sequence()
+    ctx2 = _ctx(); ctx2.update(0, a[0])
+    pf1.plan(ctx2, 0)
+    ctx2.update(1, b[1])
+    plan1 = dict(pf1.plan(ctx2, 1))
+    # one-shot keeps the layer-0 prediction; never upgrades to task b info
+    if (2, 7) in plan1:
+        assert plan1[(2, 7)] <= plan[(2, 7)] + 1e-12
+
+
+def test_traced_topk_aggregates_across_sequences():
+    pf = TracedTopKPrefetcher(L, E, k=2)
+    c1 = _ctx(); c1.cur_eam[1, 3] = 100
+    c2 = _ctx(); c2.cur_eam[1, 5] = 60
+    pf.observe(c1); pf.observe(c2)
+    plan = [k for k, _ in pf.plan(_ctx(), 0)]
+    assert plan[0] == (1, 3) and plan[1] == (1, 5)
+
+
+def test_topk_prefetcher_is_activation_blind():
+    pf = TopKPrefetcher(k=3)
+    plan = [k for k, _ in pf.plan(_ctx(), 1)]
+    assert plan == [(2, 0), (2, 1), (2, 2)]
+
+
+def test_prediction_accuracy_metric():
+    planned = [(1, 0), (1, 1), (1, 2), (1, 3)]
+    activated = [(1, 1), (1, 5)]
+    assert prediction_accuracy(planned, activated, budget=4) == 0.5
+    assert prediction_accuracy(planned, activated, budget=1) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2
+# ---------------------------------------------------------------------------
+
+def test_cache_replacement_argmin_score():
+    ctx = _ctx()
+    ctx.cur_eam[0, 0] = 8           # hot early expert
+    ctx.cur_eam[2, 1] = 8           # hot late expert
+    pol = ActivationAwareCache(ctx)
+    cached = [(0, 0), (2, 1), (3, 4)]   # (3,4) unused
+    v = pol.victim(cached)
+    assert v == (3, 4)
+    # among used ones, late layer is evicted first (layer decay)
+    v2 = pol.victim([(0, 0), (2, 1)])
+    assert v2 == (2, 1)
+
+
+def test_cache_scores_match_algorithm2():
+    ctx = _ctx()
+    ctx.cur_eam[1] = np.array([6, 2, 0, 0, 0, 0, 0, 0], np.float64)
+    pol = ActivationAwareCache(ctx)
+    s = pol.scores([(1, 0), (1, 1), (1, 2)])
+    decay = 1 - 1 / L
+    assert s[0] == pytest.approx((0.75 + EPSILON) * decay)
+    assert s[1] == pytest.approx((0.25 + EPSILON) * decay)
+    assert s[2] == pytest.approx(EPSILON * decay)
+
+
+def test_cache_protected_not_evicted():
+    ctx = _ctx()
+    pol = ActivationAwareCache(ctx)
+    cache = ExpertCache(2, pol)
+    cache.insert((0, 0))
+    cache.insert((1, 1))
+    ev = cache.insert((2, 2), protected=frozenset([(0, 0), (1, 1)]))
+    assert ev in [(0, 0), (1, 1)]  # forced: everything protected → fallback
+    ev2 = cache.insert((3, 3), protected=frozenset([(2, 2)]))
+    assert ev2 != (2, 2)
+
+
+def test_lru_and_lfu_semantics():
+    lru = ExpertCache(2, LRUCache())
+    lru.insert((0, 0), 0); lru.insert((0, 1), 1)
+    lru.access((0, 0), 2)
+    assert lru.insert((0, 2), 3) == (0, 1)
+
+    lfu = ExpertCache(2, LFUCache())
+    lfu.insert((0, 0), 0)
+    lfu.access((0, 0), 1); lfu.access((0, 0), 2)
+    lfu.insert((0, 1), 3)
+    assert lfu.insert((0, 2), 4) == (0, 1)
+
+
+def test_lfu_counter_resets_on_eviction():
+    pol = LFUCache()
+    c = ExpertCache(1, pol)
+    c.insert((0, 0))
+    for _ in range(5):
+        c.access((0, 0))
+    c.insert((0, 1))  # evicts (0,0), counter reset
+    assert pol.freq.get((0, 0), 0) == 0
+
+
+def test_neighbor_aware_groups_layers():
+    pol = NeighborAwareCache()
+    c = ExpertCache(3, pol)
+    c.insert((0, 0), 0); c.insert((0, 1), 1); c.insert((5, 0), 2)
+    c.access((0, 0), 3)   # refreshes layer 0 — (0,1) benefits too
+    assert c.insert((7, 7), 4) == (5, 0)
+
+
+def test_oracle_cache_is_belady():
+    future = [(0, 0), (1, 1), (0, 0), (2, 2), (1, 1), (0, 0)]
+    pol = OracleCache(future)
+    c = ExpertCache(2, pol)
+    c.insert((0, 0)); c.insert((1, 1))
+    pol.advance_to(3)
+    # next uses: (0,0)@5, (1,1)@4 → evict (0,0)
+    assert c.insert((2, 2)) == (0, 0)
+
+
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 7)),
+                min_size=1, max_size=40))
+@settings(max_examples=30, deadline=None)
+def test_cache_invariants(accesses):
+    """Capacity never exceeded; no duplicates; hit+miss == accesses."""
+    ctx = _ctx()
+    cache = ExpertCache(3, ActivationAwareCache(ctx))
+    for key in accesses:
+        if not cache.access(key):
+            cache.insert(key)
+    assert len(cache.resident) <= 3
+    assert len(set(cache.resident)) == len(cache.resident)
+    assert cache.hits + cache.misses == len(accesses)
