@@ -44,7 +44,7 @@ def run_cluster(arch_id, n_nodes, *, n_seqs=12, iters=12, seed=4):
     lat = []
     for s in range(n_seqs):
         for e in engines:
-            e.start_sequence()
+            e.register_seq(s)
         task = s % 3
         for it in range(iters):
             n_tok = 16 if it == 0 else 1
@@ -65,7 +65,7 @@ def run_cluster(arch_id, n_nodes, *, n_seqs=12, iters=12, seed=4):
             tokens += n_tok
             lat.append(clock - t0)
         for e in engines:
-            e.end_sequence()
+            e.finish_seq(s)
     return float(np.mean(lat)), tokens / clock
 
 

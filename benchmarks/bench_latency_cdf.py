@@ -1,22 +1,46 @@
-"""Fig 5: latency CDF under low / high load (MoE-Infinity vs PyTorch-UM)."""
+"""Fig 5: latency CDF under low / high load (MoE-Infinity vs PyTorch-UM).
+
+``--scheduling`` selects the batching model (``continuous`` iteration-level
+admission, ``static`` seed batch-to-completion, or ``both``); under high
+load the tail of the end-to-end CDF is dominated by queueing delay, which
+continuous batching removes.
+"""
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 
 from benchmarks.common import build_engine, emit, run_workload
 
 
-def main(quick=True):
+def main(quick=True, scheduling="continuous"):
     n = 30 if quick else 100
+    modes = ["static", "continuous"] if scheduling == "both" else [scheduling]
     for load, rps in (("low", 0.5), ("high", 6.0)):
         for system in ("moe-infinity", "pytorch-um"):
-            eng = build_engine("switch-large-128", system)
-            run_workload(eng, n_requests=n, rps=rps, seed=11)
-            lat = np.array(eng.token_latencies) * 1000
-            for p in (50, 90, 99):
-                emit(f"fig5/{load}/{system}/p{p}",
-                     round(float(np.percentile(lat, p)), 2), "ms/token")
+            for mode in modes:
+                eng = build_engine("switch-large-128", system,
+                                   scheduling=mode)
+                reqs = run_workload(eng, n_requests=n, rps=rps, seed=11)
+                lat = np.array(eng.token_latencies) * 1000
+                e2e = np.array([r.latency for r in reqs]) * 1000
+                tag = f"fig5/{load}/{system}" + \
+                    (f"/{mode}" if len(modes) > 1 else "")
+                for p in (50, 90, 99):
+                    emit(f"{tag}/p{p}",
+                         round(float(np.percentile(lat, p)), 2), "ms/token")
+                    emit(f"{tag}/e2e-p{p}",
+                         round(float(np.percentile(e2e, p)), 2), "ms")
 
 
 if __name__ == "__main__":
-    main(quick=False)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--scheduling", default="both",
+                    choices=["static", "continuous", "both"])
+    args = ap.parse_args()
+    if not args.full:
+        print("# quick mode (30 requests); pass --full for the "
+              "paper-scale Fig 5 CDFs")
+    main(quick=not args.full, scheduling=args.scheduling)

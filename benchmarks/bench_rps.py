@@ -1,37 +1,72 @@
-"""Fig 4: per-token latency vs requests-per-second, per model × system."""
+"""Fig 4: per-token latency vs requests-per-second, per model × system.
+
+``--scheduling`` adds the iteration-level-batching axis: ``continuous``
+(default) admits requests at every token boundary, ``static`` reproduces the
+seed engine's batch-to-completion scheduling, ``both`` runs the two
+back-to-back and reports how often continuous wins on mean end-to-end
+latency at the same request rate (queueing delay no longer serialized per
+batch).
+"""
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 
-from benchmarks.common import build_engine, emit, run_workload
+from benchmarks.common import build_engine, emit, mean_e2e, run_workload
 
 MODELS = ["switch-base-128", "switch-base-256", "switch-large-128",
           "nllb-moe-128"]
 SYSTEMS = ["moe-infinity", "pytorch-um", "zero-style"]
 
 
-def main(quick=True):
+def main(quick=True, scheduling="continuous"):
     rps_list = [0.5, 2.0] if quick else [0.5, 1.0, 2.0, 4.0, 8.0]
     models = MODELS[:2] if quick else MODELS
     n = 24 if quick else 80
+    modes = ["static", "continuous"] if scheduling == "both" else [scheduling]
     results = {}
+    e2e = {}
     for model in models:
         for system in SYSTEMS:
             for rps in rps_list:
-                eng = build_engine(model, system)
-                reqs = run_workload(eng, n_requests=n, rps=rps)
-                lat = eng.stats()["mean_token_latency"]
-                results[(model, system, rps)] = lat
-                emit(f"fig4/{model}/{system}/rps={rps}",
-                     round(lat * 1000, 2), "ms/token")
+                for mode in modes:
+                    eng = build_engine(model, system, scheduling=mode)
+                    reqs = run_workload(eng, n_requests=n, rps=rps)
+                    lat = eng.stats()["mean_token_latency"]
+                    results[(model, system, rps, mode)] = lat
+                    e2e[(model, system, rps, mode)] = mean_e2e(reqs)
+                    tag = f"fig4/{model}/{system}/rps={rps}" + \
+                        (f"/{mode}" if len(modes) > 1 else "")
+                    emit(tag, round(lat * 1000, 2), "ms/token")
+                    emit(tag + "/e2e",
+                         round(e2e[(model, system, rps, mode)] * 1000, 2),
+                         "ms")
     # paper claim: MoE-Infinity is fastest at every point
-    wins = sum(
-        results[(m, "moe-infinity", r)] <= min(
-            results[(m, s, r)] for s in SYSTEMS)
-        for m in models for r in rps_list)
-    emit("fig4/moe-infinity-wins", wins, "points",
-         f"of {len(models) * len(rps_list)}")
+    for mode in modes:
+        wins = sum(
+            results[(m, "moe-infinity", r, mode)] <= min(
+                results[(m, s, r, mode)] for s in SYSTEMS)
+            for m in models for r in rps_list)
+        tag = "fig4/moe-infinity-wins" + \
+            (f"/{mode}" if len(modes) > 1 else "")
+        emit(tag, wins, "points", f"of {len(models) * len(rps_list)}")
+    if len(modes) > 1:
+        # iteration-level batching removes per-batch queueing serialization
+        pts = [(m, s, r) for m in models for s in SYSTEMS for r in rps_list]
+        cwins = sum(e2e[(m, s, r, "continuous")] < e2e[(m, s, r, "static")]
+                    for m, s, r in pts)
+        emit("fig4/continuous-beats-static-e2e", cwins, "points",
+             f"of {len(pts)}")
 
 
 if __name__ == "__main__":
-    main(quick=False)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--scheduling", default="both",
+                    choices=["static", "continuous", "both"])
+    args = ap.parse_args()
+    if not args.full:
+        print("# quick mode (2 models x 2 rates); pass --full for the "
+              "paper-scale Fig 4 sweep")
+    main(quick=not args.full, scheduling=args.scheduling)

@@ -59,7 +59,8 @@ SYSTEMS = {
 
 def build_engine(arch_id="switch-base-128", system="moe-infinity", *,
                  gpu_slots=None, dram_slots=None, eamc=None, oracle=None,
-                 hw=None, max_batch=16, seed=0, topk_all=True):
+                 hw=None, max_batch=16, seed=0, topk_all=True,
+                 scheduling="continuous"):
     arch = get_config(arch_id)
     oracle = oracle or build_oracle(arch)
     eamc = eamc if eamc is not None else build_eamc(arch, oracle)
@@ -80,6 +81,7 @@ def build_engine(arch_id="switch-base-128", system="moe-infinity", *,
                        prefetch=prefetch, bytes_per_param=4,
                        hw=hw or HWConfig(),
                        scheduler=SchedulerConfig(max_batch=max_batch),
+                       scheduling=scheduling,
                        demand_overhead_s=demand_overhead)
     prefetcher = None
     if prefetch == "topk":
@@ -98,6 +100,12 @@ def run_workload(engine, n_requests=40, rps=2.0, seed=3,
                                               seed=seed + 1))
     engine.run(reqs)
     return reqs
+
+
+def mean_e2e(reqs):
+    """Mean end-to-end latency (arrival -> last token), the metric that
+    exposes batching/queueing delay."""
+    return float(np.mean([r.latency for r in reqs]))
 
 
 def emit(name, value, unit="", derived=""):

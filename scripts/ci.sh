@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# One-shot tier-1 verify: install dev deps (best effort — offline
+# containers keep whatever is baked in) and run the test suite.
+#
+#   scripts/ci.sh            # quick: install + pytest
+#   SKIP_INSTALL=1 scripts/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [ -z "${SKIP_INSTALL:-}" ]; then
+    python -m pip install -q -r requirements-dev.txt || \
+        echo "ci.sh: pip install failed (offline?); running with baked-in deps"
+fi
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -139,14 +139,26 @@ class NeighborAwareCache(LRUCache):
 
     name = "neighbor"
 
-    def on_access(self, key, now):
+    def __init__(self):
+        super().__init__()
+        self.layer_last: Dict[Hashable, float] = {}
+
+    def _touch(self, key, now):
         t = self._now(now)
         self.last[key] = t
-        self.layer_last = getattr(self, "layer_last", {})
         self.layer_last[key[0]] = t
 
+    def on_access(self, key, now):
+        self._touch(key, now)
+
+    def on_insert(self, key, now):
+        # an insert is a use of the layer group too — without this, experts
+        # that only ever arrive via prefetch never refresh their layer's
+        # timestamp and the group is evicted as if idle
+        self._touch(key, now)
+
     def victim(self, cached, protected=frozenset()):
-        layer_last = getattr(self, "layer_last", {})
+        layer_last = self.layer_last
         best, best_t = None, None
         for k in cached:
             if k in protected:
@@ -222,13 +234,17 @@ class ExpertCache:
         evicted = None
         if len(self.resident) >= self.capacity:
             evicted = self.policy.victim(self.resident, protected)
-            self.resident.remove(evicted)
-            self._set.discard(evicted)
-            self.policy.on_evict(evicted)
+            self.remove(evicted)
         self.resident.append(key)
         self._set.add(key)
         self.policy.on_insert(key, now)
         return evicted
+
+    def remove(self, key: Key) -> None:
+        """Evict a specific resident key (caller already chose the victim)."""
+        self.resident.remove(key)
+        self._set.discard(key)
+        self.policy.on_evict(key)
 
     @property
     def hit_ratio(self) -> float:

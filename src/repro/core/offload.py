@@ -14,7 +14,7 @@ queue-jump), (4) applies cache replacement on every arrival (Alg. 2), and
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Hashable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -54,6 +54,9 @@ class OffloadEngine:
                  oracle_future: Optional[List[Key]] = None):
         self.cfg = cfg
         self.ctx = SequenceContext(cfg.n_moe_layers, cfg.n_experts)
+        # rid-keyed per-request contexts; ``self.ctx`` is the incrementally
+        # maintained batch-combined EAM of the *live* requests only
+        self.seq_ctxs: Dict[Hashable, SequenceContext] = {}
         self.eamc = eamc if eamc is not None else EAMC(capacity=128)
 
         if prefetcher is not None:
@@ -132,60 +135,110 @@ class OffloadEngine:
             evicted = self.gpu_cache.insert(key, now, self._protected)
             if evicted is not None:
                 self.sim.evict(evicted, GPU)
-                # demoted experts fall back to the DRAM tier if resident there;
-                # otherwise they are dropped (weights are read-only)
+                self._demote(evicted, now)
         else:
             evicted = self.dram_cache.insert(key, now, self._protected)
             if evicted is not None:
                 self.sim.evict(evicted, DRAM)
 
+    def _demote(self, key: Key, now: float) -> None:
+        """A GPU-evicted expert falls back to the DRAM tier (no copy is
+        simulated: the DRAM image is still valid — weights are read-only —
+        so demotion is a residency-set update). Like prefetch admission
+        (§6.2: replacement decided before the copy), the activation-aware
+        DRAM tier only takes the demoted expert when its score beats the
+        would-be victim's; baselines page back unconditionally (CUDA-UM)."""
+        if key in self.dram_cache:
+            self.sim.in_dram.add(key)
+            return
+        if len(self.dram_cache.resident) >= self.dram_cache.capacity and \
+                isinstance(self.dram_cache.policy, ActivationAwareCache):
+            victim = self.dram_cache.policy.victim(
+                self.dram_cache.resident, self._protected)
+            vscore, kscore = self.dram_cache.policy.scores([victim, key])
+            if kscore <= vscore:
+                return           # demoted expert is colder than everything
+            # evict the victim we already chose (avoids a second scan
+            # inside insert — this runs on the per-arrival hot path)
+            self.dram_cache.remove(victim)
+            self.sim.evict(victim, DRAM)
+        dram_victim = self.dram_cache.insert(key, now, self._protected)
+        if dram_victim is not None:
+            self.sim.evict(dram_victim, DRAM)
+        self.sim.in_dram.add(key)
+
     # -- sequence lifecycle ----------------------------------------------------
     # The paper traces *per sequence* (§4: separate EAMs; aggregation across
-    # sequences destroys the signal). For a batch of B sequences the engine
-    # keeps B SequenceContexts; prefetch plans are computed per sequence and
-    # merged by max-priority. ``self.ctx`` holds the batch-combined EAM used
-    # by Algorithm 2's cache scoring ("the ongoing generative inference").
-    def start_sequence(self, n_seqs: int = 1) -> None:
-        self.ctx.reset()
-        self.seq_ctxs = [SequenceContext(self.cfg.n_moe_layers,
-                                         self.cfg.n_experts)
-                         for _ in range(n_seqs)]
-        self.sim.clear_queues()
-        if isinstance(self.prefetcher, ActivationAwarePrefetcher):
-            self.prefetcher.start_sequence()
+    # sequences destroys the signal). Sequence state follows *request*
+    # lifetime, not batch lifetime: the serving engine registers a context
+    # when a request is admitted (at any token boundary, under continuous
+    # batching) and finishes it when the request completes. Prefetch plans
+    # are computed per live sequence and merged by max-priority; ``self.ctx``
+    # holds the batch-combined EAM used by Algorithm 2's cache scoring ("the
+    # ongoing generative inference") and is maintained incrementally as
+    # sequences join and leave.
+    def register_seq(self, rid: Hashable) -> SequenceContext:
+        """A request joins the running set; its per-sequence EAM starts."""
+        if rid in self.seq_ctxs:
+            return self.seq_ctxs[rid]
+        if not self.seq_ctxs and \
+                isinstance(self.prefetcher, ActivationAwarePrefetcher):
+            self.prefetcher.start_sequence()   # fresh inference procedure
+        ctx = SequenceContext(self.cfg.n_moe_layers, self.cfg.n_experts)
+        self.seq_ctxs[rid] = ctx
+        return ctx
 
-    def end_sequence(self, *, record_drift: bool = False) -> np.ndarray:
-        eam = self.ctx.cur_eam.copy()
-        self.sim.clear_queues()
-        for c in getattr(self, "seq_ctxs", [self.ctx]):
-            self.prefetcher.observe(c)
+    def finish_seq(self, rid: Hashable, *,
+                   record_drift: bool = False) -> Optional[np.ndarray]:
+        """A request completed: free its context and remove its counts from
+        the batch-combined EAM so it stops influencing Alg. 2 cache scores
+        and prefetch merging. Returns the sequence's final EAM."""
+        ctx = self.seq_ctxs.pop(rid, None)
+        if ctx is None:
+            return None
+        eam = ctx.cur_eam.copy()
+        np.subtract(self.ctx.cur_eam, eam, out=self.ctx.cur_eam)
+        np.maximum(self.ctx.cur_eam, 0.0, out=self.ctx.cur_eam)
+        self.prefetcher.observe(ctx)
         if record_drift:
             self.eamc.record_for_reconstruction(eam)
+        if not self.seq_ctxs:
+            # engine idle: the inference procedure is over — drop its
+            # prefetch queue (Algorithm 1's ``q`` is procedure-scoped) and
+            # clear residual float fuzz in the combined EAM
+            self.ctx.reset()
+            self.sim.clear_queues()
         return eam
 
     # -- the per-layer hot path (Algorithm 1) -----------------------------------
     def on_layer(self, layer_idx: int, token_counts: np.ndarray,
-                 compute_time: float) -> float:
+                 compute_time: float,
+                 rids: Optional[Sequence[Hashable]] = None) -> float:
         """``token_counts``: (B, E) or (E,) tokens routed to each expert of
-        this layer this iteration (per live sequence when 2-D). Returns stall
-        seconds spent waiting for experts."""
+        this layer this iteration (per live sequence when 2-D); ``rids``
+        names the request behind each row (defaults to registration order,
+        auto-registering slot-keyed sequences for direct/legacy drivers).
+        Returns stall seconds spent waiting for experts."""
         token_counts = np.asarray(token_counts)
         if token_counts.ndim == 1:
             token_counts = token_counts[None]
-        if not hasattr(self, "seq_ctxs") or \
-                len(self.seq_ctxs) != token_counts.shape[0]:
-            self.seq_ctxs = [SequenceContext(self.cfg.n_moe_layers,
-                                             self.cfg.n_experts)
-                             for _ in range(token_counts.shape[0])]
+        if rids is None:
+            if len(self.seq_ctxs) == token_counts.shape[0]:
+                rids = list(self.seq_ctxs)
+            else:
+                rids = [("_slot", b) for b in range(token_counts.shape[0])]
         combined = token_counts.sum(axis=0)
         self.ctx.update(layer_idx, combined)                # steps 6-7
 
         # step 8: per-sequence predictions, merged by max priority
         merged: Dict[Key, float] = {}
         pred_merged = None
-        for b, c in enumerate(self.seq_ctxs):
+        for b, rid in enumerate(rids):
+            c = self.seq_ctxs.get(rid)
+            if c is None:
+                c = self.register_seq(rid)
             if token_counts[b].sum() == 0 and c.cur_eam.sum() == 0:
-                continue  # finished / empty slot
+                continue  # no activity yet
             c.update(layer_idx, token_counts[b])
             for key, pr in self.prefetcher.plan(c, layer_idx):
                 if self.cfg.prefetch_lookahead and \

@@ -15,28 +15,27 @@ from repro.core.eam import EAMC
 
 
 class SequenceTracer:
-    """Accumulates an EAM per live sequence (batch slot)."""
+    """Accumulates an EAM per live sequence, keyed by request id. Sequence
+    state follows request lifetime (``start`` on admission, ``finish`` on
+    completion), so under continuous batching a request's trace is
+    independent of which batch slots it shared iterations with."""
 
     def __init__(self, n_moe_layers: int, n_experts: int):
         self.L = n_moe_layers
         self.E = n_experts
         self.eams: dict[int, np.ndarray] = {}
 
-    def start(self, seq_id: int) -> None:
-        self.eams[seq_id] = np.zeros((self.L, self.E), np.float64)
+    def start(self, rid: int) -> None:
+        self.eams[rid] = np.zeros((self.L, self.E), np.float64)
 
-    def record_step(self, seq_ids: List[int], counts: np.ndarray) -> None:
-        """counts: (n_moe_layers, B, E) from one forward/decode step."""
-        counts = np.asarray(counts)
-        for b, sid in enumerate(seq_ids):
-            if sid is None:
-                continue
-            if sid not in self.eams:
-                self.start(sid)
-            self.eams[sid] += counts[:, b, :]
+    def record(self, rid: int, counts: np.ndarray) -> None:
+        """counts: (n_moe_layers, E) routed by one request this iteration."""
+        if rid not in self.eams:
+            self.start(rid)
+        self.eams[rid] += counts
 
-    def finish(self, seq_id: int) -> Optional[np.ndarray]:
-        return self.eams.pop(seq_id, None)
+    def finish(self, rid: int) -> Optional[np.ndarray]:
+        return self.eams.pop(rid, None)
 
 
 def build_eamc(run_fn: Callable[[np.ndarray], np.ndarray],

@@ -1,4 +1,7 @@
-from repro.serving.engine import ServingEngine, EngineConfig  # noqa: F401
-from repro.serving.scheduler import Scheduler, SchedulerConfig  # noqa: F401
+from repro.serving.engine import (  # noqa: F401
+    EngineConfig, JaxModelServer, ServingEngine, StepEngine)
+from repro.serving.scheduler import (  # noqa: F401
+    ContinuousScheduler, Scheduler, SchedulerConfig, StaticBatchScheduler,
+    make_scheduler)
 from repro.serving.workload import (  # noqa: F401
     WorkloadConfig, make_dataset, poisson_arrivals, azure_like_arrivals)

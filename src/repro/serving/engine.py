@@ -1,7 +1,7 @@
-"""The serving engine: batched generative inference with activation-aware
-expert offloading (Figure 2's runtime).
+"""The serving engine: iteration-level batched generative inference with
+activation-aware expert offloading (Figure 2's runtime).
 
-Two routing sources share one code path:
+Two routing sources share one step loop:
 
 * **model mode** — a real JAX model (`repro.models.Model`) runs prefill +
   per-token decode; router decisions come from ``aux["counts"]``. Used by
@@ -11,10 +11,16 @@ Two routing sources share one code path:
   benchmark sweeps (30-minute Azure-style replays would be infeasible with
   per-token JAX dispatch on 2 CPU cores).
 
-Per forward iteration the engine walks MoE layers in execution order,
-feeding the OffloadEngine (Algorithm 1/2) and advancing the virtual clock by
-the perf-model compute time; per-token latency = compute + expert stalls,
-end-to-end latency additionally includes batching/queueing delay.
+The unit of scheduling is one forward iteration, not one batch: at every
+token boundary the scheduler may admit newly-arrived requests (their prefill
+runs inside that iteration, mixed with the running requests' decode) and
+completed requests leave immediately. Per iteration the engine walks MoE
+layers in execution order, feeding the OffloadEngine (Algorithm 1/2) and
+advancing the virtual clock by the perf-model compute time — with prefill
+and decode tokens accounted separately (each request contributes its own
+token count and context length). Per-token latency = compute + expert
+stalls; end-to-end latency additionally includes admission queueing delay,
+which continuous batching mostly removes.
 """
 from __future__ import annotations
 
@@ -28,9 +34,11 @@ from repro.core.eam import EAMC
 from repro.core.memsim import HWConfig, PAPER_8GPU
 from repro.core.offload import OffloadConfig, OffloadEngine
 from repro.core.tracer import SequenceTracer
-from repro.serving.perf_model import expert_bytes, layer_cost, layer_time
-from repro.serving.request import Batch, Request
-from repro.serving.scheduler import Scheduler, SchedulerConfig
+from repro.serving.perf_model import (expert_bytes, layer_cost,
+                                      layer_time_mixed)
+from repro.serving.request import DECODE, DONE, PREFILL, Request
+from repro.serving.scheduler import (ContinuousScheduler, SchedulerConfig,
+                                     make_scheduler)
 
 
 # ---------------------------------------------------------------------------
@@ -76,27 +84,34 @@ class EngineConfig:
     cache_policy: str = "moe-infinity"
     prefetch: str = "moe-infinity"
     scheduler: SchedulerConfig = field(default_factory=SchedulerConfig)
+    scheduling: str = "continuous"   # | "static" (seed batch-to-completion)
     bytes_per_param: int = 2
     record_drift: bool = False
+    # retain each finished request's EAM in ``engine.request_eams`` (needed
+    # by drift analysis and the batch-invariance tests; turn off for very
+    # long replays where thousands of (L, E) arrays would accumulate)
+    keep_request_eams: bool = True
     demand_overhead_s: float = 0.0   # UM-style per-fault handling overhead
     n_gpu_links: int = 1             # parallel DRAM→device links
     transfer_bytes_factor: float = 1.0  # <1 = quantized expert transfers
 
 
-class ServingEngine:
+class StepEngine:
+    """Shared iteration-level step loop for trace mode and model mode.
+
+    Subclasses provide ``_route_iteration(reqs, tokens) -> (n_moe, B, E)``
+    routed-token counts; everything else — admission, per-request sequence
+    lifecycle in the offload engine and tracer, mixed prefill/decode compute
+    accounting, completion bookkeeping — lives here.
+    """
+
     def __init__(self, cfg: EngineConfig, *, eamc: Optional[EAMC] = None,
-                 oracle: Optional[RoutingOracle] = None,
-                 model=None, params=None, seed: int = 0,
                  prefetcher=None, cache_policy=None):
         self.cfg = cfg
         arch = cfg.arch
         self.moe_layers = [i for i in range(arch.n_layers)
                            if arch.is_moe_layer(i)]
         self.n_moe = len(self.moe_layers)
-        self.oracle = oracle
-        self.model = model
-        self.params = params
-        self.rng = np.random.default_rng(seed)
         ocfg = OffloadConfig(
             n_moe_layers=self.n_moe,
             n_experts=arch.moe.n_experts,
@@ -115,125 +130,126 @@ class ServingEngine:
         self.tracer = SequenceTracer(self.n_moe, arch.moe.n_experts)
         self._costs = {i: layer_cost(arch, i, cfg.bytes_per_param)
                        for i in range(arch.n_layers)}
+        self._running: List[Request] = []
+        self.request_eams: Dict[int, np.ndarray] = {}
         self.token_latencies: List[float] = []
         self.iter_log: List[dict] = []
+        self.prefill_tokens = 0
+        self.decode_tokens = 0
 
-    # -- compute-time helpers -------------------------------------------------
-    def _iter_time_dense(self, n_tokens: int, ctx: int) -> float:
-        """Non-MoE layers' compute for one iteration (experts excluded)."""
-        t = 0.0
-        for i, c in self._costs.items():
-            if self.cfg.arch.is_moe_layer(i):
-                continue
-            t += layer_time(c, self.cfg.hw, n_tokens, ctx)
-        return t
-
-    def _moe_layer_time(self, layer_idx: int, n_tokens: int, ctx: int,
-                        expert_tokens: float) -> float:
-        return layer_time(self._costs[layer_idx], self.cfg.hw, n_tokens, ctx,
-                          expert_tokens)
-
-    # -- routing ----------------------------------------------------------------
-    def _route_iteration(self, batch: Batch, n_tokens_per_req: Dict[int, int]
+    # -- routing (subclass responsibility) -----------------------------------
+    def _route_iteration(self, reqs: List[Request], tokens: List[int]
                          ) -> np.ndarray:
-        """-> counts (n_moe, B, E) for one forward iteration."""
-        E = self.cfg.arch.moe.n_experts
-        out = np.zeros((self.n_moe, batch.size, E), np.int64)
-        for b, r in enumerate(batch.requests):
-            n = n_tokens_per_req.get(r.rid, 0)
-            if n <= 0:
-                continue
-            out[:, b, :] = self.oracle.route_tokens(r.task_id, n, self.rng)
-        return out
+        """-> (n_moe, len(reqs), E) routed-token counts for one iteration."""
+        raise NotImplementedError
 
-    # -- main loop ---------------------------------------------------------------
-    def run(self, requests: List[Request], *, max_iters: int = 10_000
-            ) -> List[Request]:
-        sched = Scheduler(self.cfg.scheduler, requests)
-        sim = self.offload.sim
-        while not sched.done():
-            batch = sched.next_batch(sim.clock)
-            if batch is None:
-                break
-            # jump virtual time forward to the batch launch
-            if batch.t_formed > sim.clock:
-                sim.advance(batch.t_formed - sim.clock)
-            self._run_batch(batch)
-        return requests
-
-    def _run_batch(self, batch: Batch) -> None:
-        sim = self.offload.sim
-        arch = self.cfg.arch
-        self.offload.start_sequence(n_seqs=batch.size)
-        for r in batch.requests:
-            r.t_sched = sim.clock
-            self.tracer.start(r.rid)
-
-        # ---- prefill iteration (all prompt tokens)
-        prompt_tokens = {r.rid: len(r.prompt) for r in batch.requests}
-        counts = self._route_iteration(batch, prompt_tokens)
-        total_prompt = sum(prompt_tokens.values())
-        ctx = max(len(r.prompt) for r in batch.requests)
-        self._execute_iteration(batch, counts, total_prompt, ctx)
-        for r in batch.requests:
-            r.t_first = sim.clock
-            r.n_generated = 1
-        self.tracer.record_step([r.rid for r in batch.requests],
-                                counts)
-
-        # ---- decode iterations
-        live = {r.rid: r for r in batch.requests}
-        it = 1
-        while live:
-            decode_tokens = {rid: 1 for rid in live}
-            counts = self._route_iteration(batch, decode_tokens)
-            self._execute_iteration(batch, counts, len(live), ctx + it)
-            self.tracer.record_step(
-                [r.rid if r.rid in live else None for r in batch.requests],
-                counts)
-            done = []
-            for rid, r in live.items():
-                r.n_generated += 1
-                if r.n_generated >= r.max_new_tokens:
-                    r.t_done = self.offload.sim.clock
-                    done.append(rid)
-            for rid in done:
-                del live[rid]
+    # -- the step loop --------------------------------------------------------
+    def run_loop(self, scheduler, *, max_iters: int = 10_000) -> None:
+        it = 0
+        while self.step(scheduler):
             it += 1
-            if it > 10_000:
+            if it > max_iters:
                 raise RuntimeError("runaway generation")
-        for r in batch.requests:
-            eam = self.tracer.finish(r.rid)
-            if self.cfg.record_drift and eam is not None:
+
+    def step(self, scheduler) -> bool:
+        """One forward iteration: admit at the token boundary, route,
+        execute, retire completions. Returns False when all work is done."""
+        sim = self.offload.sim
+        if not self._running:
+            if scheduler.done():
+                return False
+            # idle: jump virtual time to the next admissible arrival
+            t = scheduler.next_event(sim.clock)
+            if t is not None and t > sim.clock:
+                sim.advance(t - sim.clock)
+        for r in scheduler.admit(sim.clock):
+            r.t_sched = sim.clock
+            r.state = PREFILL
+            self.offload.register_seq(r.rid)
+            self.tracer.start(r.rid)
+            self._running.append(r)
+        if not self._running:
+            return not scheduler.done()
+
+        reqs = list(self._running)     # admission order = batch columns
+        tokens, ctxs = [], []
+        for r in reqs:
+            if r.state == PREFILL:
+                tokens.append(r.prompt_len)
+                ctxs.append(r.prompt_len)
+            else:
+                tokens.append(1)
+                ctxs.append(r.prompt_len + r.n_generated)
+        counts = self._route_iteration(reqs, tokens)
+        self._execute_iteration(reqs, counts, tokens, ctxs)
+
+        now = sim.clock
+        for b, r in enumerate(reqs):
+            self.tracer.record(r.rid, counts[:, b, :])
+            if r.state == PREFILL:
+                r.t_first = now            # prefill emitted the first token
+                r.state = DECODE
+            r.n_generated += 1
+            if r.n_generated >= r.max_new_tokens:
+                r.t_done = now
+                r.state = DONE
+                self._retire(r)
+                scheduler.on_finish(r.rid)
+        self._running = [r for r in self._running if r.state != DONE]
+        return True
+
+    def _retire(self, r: Request) -> None:
+        self.offload.finish_seq(r.rid)
+        eam = self.tracer.finish(r.rid)
+        if eam is not None:
+            if self.cfg.keep_request_eams:
+                self.request_eams[r.rid] = eam
+            if self.cfg.record_drift:
                 self.eamc_record(eam)
-        self.offload.end_sequence()
 
     def eamc_record(self, eam: np.ndarray) -> None:
         self.offload.eamc.record_for_reconstruction(eam)
 
-    def _execute_iteration(self, batch: Batch, counts: np.ndarray,
-                           n_tokens: int, ctx: int) -> None:
-        """One forward pass: walk layers in order, offload-aware."""
+    # -- one forward pass ------------------------------------------------------
+    def _execute_iteration(self, reqs: List[Request], counts: np.ndarray,
+                           tokens: List[int], ctxs: List[int]) -> None:
+        """Walk layers in order, offload-aware. Prefill and decode tokens
+        are accounted separately: each request contributes its own (tokens,
+        context) pair to the roofline instead of the batch being lumped
+        under the maximum context."""
         sim = self.offload.sim
         t0 = sim.clock
+        token_ctx = list(zip(tokens, ctxs))
+        rids = [r.rid for r in reqs]
         # dense layers run between MoE layers; amortize their compute evenly
         # across MoE layer boundaries to keep the event loop per-MoE-layer
-        dense_t = self._iter_time_dense(n_tokens, ctx)
+        dense_t = sum(
+            layer_time_mixed(c, self.cfg.hw, token_ctx)
+            for i, c in self._costs.items()
+            if not self.cfg.arch.is_moe_layer(i))
         slices = max(1, self.n_moe)
         for li, layer_idx in enumerate(self.moe_layers):
             sim.advance(dense_t / slices)
-            comp = self._moe_layer_time(layer_idx, n_tokens, ctx,
-                                        float(counts[li].sum()))
-            self.offload.on_layer(li, counts[li], comp)
+            comp = layer_time_mixed(self._costs[layer_idx], self.cfg.hw,
+                                    token_ctx, float(counts[li].sum()))
+            self.offload.on_layer(li, counts[li], comp, rids=rids)
         if not self.n_moe:
             sim.advance(dense_t)
-        self.token_latencies.append(sim.clock - t0)
-        self.iter_log.append({"t": sim.clock, "n_tokens": n_tokens,
-                              "lat": sim.clock - t0})
+        lat = sim.clock - t0
+        n_prefill = sum(n for n, r in zip(tokens, reqs) if r.state == PREFILL)
+        n_decode = sum(n for n, r in zip(tokens, reqs) if r.state != PREFILL)
+        self.prefill_tokens += n_prefill
+        self.decode_tokens += n_decode
+        self.token_latencies.append(lat)
+        self.iter_log.append({"t": sim.clock, "n_tokens": sum(tokens),
+                              "n_prefill": n_prefill, "n_decode": n_decode,
+                              "batch": len(reqs), "lat": lat})
 
     # -- metrics ---------------------------------------------------------------
     def stats(self) -> dict:
         s = self.offload.stats()
+        s.update(prefill_tokens=self.prefill_tokens,
+                 decode_tokens=self.decode_tokens)
         lat = np.array(self.token_latencies)
         if len(lat):
             s.update(mean_token_latency=float(lat.mean()),
@@ -242,90 +258,123 @@ class ServingEngine:
         return s
 
 
+class ServingEngine(StepEngine):
+    """Trace-mode serving: oracle-routed requests over the step loop."""
+
+    def __init__(self, cfg: EngineConfig, *, eamc: Optional[EAMC] = None,
+                 oracle: Optional[RoutingOracle] = None,
+                 model=None, params=None, seed: int = 0,
+                 prefetcher=None, cache_policy=None):
+        super().__init__(cfg, eamc=eamc, prefetcher=prefetcher,
+                         cache_policy=cache_policy)
+        self.oracle = oracle
+        self.model = model
+        self.params = params
+        self.seed = seed
+        # routing randomness is keyed by request id, not by draw order, so a
+        # request's expert trace is identical whether it runs alone or joins
+        # a continuous batch mid-decode (sequence-lifetime determinism)
+        self._req_rngs: Dict[int, np.random.Generator] = {}
+
+    def _rng_for(self, rid: int) -> np.random.Generator:
+        rng = self._req_rngs.get(rid)
+        if rng is None:
+            rng = np.random.default_rng([self.seed, rid])
+            self._req_rngs[rid] = rng
+        return rng
+
+    def _route_iteration(self, reqs: List[Request], tokens: List[int]
+                         ) -> np.ndarray:
+        E = self.cfg.arch.moe.n_experts
+        out = np.zeros((self.n_moe, len(reqs), E), np.int64)
+        for b, (r, n) in enumerate(zip(reqs, tokens)):
+            if n <= 0:
+                continue
+            out[:, b, :] = self.oracle.route_tokens(r.task_id, n,
+                                                    self._rng_for(r.rid))
+        return out
+
+    def _retire(self, r: Request) -> None:
+        super()._retire(r)
+        self._req_rngs.pop(r.rid, None)
+
+    # -- main loop ---------------------------------------------------------------
+    def run(self, requests: List[Request], *,
+            max_iters: Optional[int] = None,
+            scheduling: Optional[str] = None) -> List[Request]:
+        sched = make_scheduler(scheduling or self.cfg.scheduling,
+                               self.cfg.scheduler, requests)
+        if max_iters is None:
+            # every iteration with live requests generates one token per
+            # running request, so the workload bounds its own iteration
+            # count; anything beyond this is a scheduler bug, not load
+            max_iters = sum(r.max_new_tokens for r in requests) \
+                + len(requests) + 16
+        self.run_loop(sched, max_iters=max_iters)
+        return requests
+
+
 # ---------------------------------------------------------------------------
 # Real-model serving (model mode)
 # ---------------------------------------------------------------------------
 
 
-class JaxModelServer:
-    """Batched generative serving of a real JAX model with the offload
-    engine in the loop. Router decisions are the model's actual top-k
+class JaxModelServer(StepEngine):
+    """Batched generative serving of a real JAX model over the same step
+    loop as trace mode. Router decisions are the model's actual top-k
     choices; latency accounting (compute + expert stalls) uses the same
-    virtual clock as trace mode.
+    virtual clock.
 
-    Prompts in one call share a length (the scheduler pads batches by
-    construction in the examples); sampling is greedy.
+    Prompts in one ``generate`` call share a length and a token budget (the
+    jitted prefill/decode kernels run the batch in lockstep); sampling is
+    greedy.
     """
 
     def __init__(self, cfg: EngineConfig, model, params, *,
                  eamc: Optional[EAMC] = None, seed: int = 0):
         import jax
 
-        self.cfg = cfg
+        super().__init__(cfg, eamc=eamc)
         self.model = model
         self.params = params
-        arch = cfg.arch
-        self.moe_layer_ids = [i for i in range(arch.n_layers)
-                              if arch.is_moe_layer(i)]
-        self.n_moe = len(self.moe_layer_ids)
-        ocfg = OffloadConfig(
-            n_moe_layers=self.n_moe,
-            n_experts=arch.moe.n_experts,
-            expert_bytes=expert_bytes(arch, cfg.bytes_per_param),
-            gpu_cache_experts=cfg.gpu_cache_experts,
-            dram_cache_experts=cfg.dram_cache_experts,
-            hw=cfg.hw, cache_policy=cfg.cache_policy, prefetch=cfg.prefetch)
-        self.offload = OffloadEngine(ocfg, eamc=eamc)
-        self.tracer = SequenceTracer(self.n_moe, arch.moe.n_experts)
-        self._costs = {i: layer_cost(arch, i, cfg.bytes_per_param)
-                       for i in range(arch.n_layers)}
         self._prefill = jax.jit(
             lambda p, b, c: model.prefill(p, b, c))
         self._step = jax.jit(
             lambda p, c, t: model.serve_step(p, c, t))
-        self.token_latencies: List[float] = []
+        self._gen: Optional[dict] = None
 
-    def _account(self, counts: np.ndarray, n_tokens: int, ctx: int) -> None:
-        sim = self.offload.sim
-        t0 = sim.clock
-        dense_t = sum(
-            layer_time(c, self.cfg.hw, n_tokens, ctx)
-            for i, c in self._costs.items()
-            if not self.cfg.arch.is_moe_layer(i))
-        for li in range(self.n_moe):
-            sim.advance(dense_t / max(1, self.n_moe))
-            comp = layer_time(self._costs[self.moe_layer_ids[li]],
-                              self.cfg.hw, n_tokens, ctx,
-                              float(counts[li].sum()))
-            self.offload.on_layer(li, counts[li], comp)
-        self.token_latencies.append(sim.clock - t0)
+    def _route_iteration(self, reqs: List[Request], tokens: List[int]
+                         ) -> np.ndarray:
+        import jax.numpy as jnp
+
+        g = self._gen
+        if g["cache"] is None:                       # prefill iteration
+            prompts = jnp.asarray(np.stack([r.prompt for r in reqs]))
+            cache = self.model.init_cache(len(reqs), g["cache_len"])
+            logits, cache, aux = self._prefill(self.params,
+                                               {"tokens": prompts}, cache)
+        else:                                        # lockstep decode
+            logits, cache, aux = self._step(self.params, g["cache"], g["tok"])
+        g["cache"] = cache
+        g["tok"] = jnp.argmax(logits, axis=-1)
+        g["out"].append(np.asarray(g["tok"]))
+        return np.asarray(aux["counts"])
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int):
         """prompts: (B, S) int32. Returns (generated (B, max_new), stats)."""
-        import jax.numpy as jnp
-
         B, S = prompts.shape
-        self.offload.start_sequence()
-        for b in range(B):
-            self.tracer.start(b)
-        cache = self.model.init_cache(B, S + max_new_tokens)
-        logits, cache, aux = self._prefill(self.params,
-                                           {"tokens": jnp.asarray(prompts)},
-                                           cache)
-        counts = np.asarray(aux["counts"])
-        self._account(counts, B * S, S)
-        self.tracer.record_step(list(range(B)), counts)
-        out = []
-        tok = jnp.argmax(logits, axis=-1)
-        for t in range(max_new_tokens):
-            out.append(np.asarray(tok))
-            logits, cache, aux = self._step(self.params, cache, tok)
-            counts = np.asarray(aux["counts"])
-            self._account(counts, B, S + t + 1)
-            self.tracer.record_step(list(range(B)), counts)
-            tok = jnp.argmax(logits, axis=-1)
-        eams = [self.tracer.finish(b) for b in range(B)]
-        self.offload.end_sequence()
+        reqs = [Request(rid=b, arrival=0.0,
+                        prompt=np.asarray(prompts[b]),
+                        max_new_tokens=max_new_tokens) for b in range(B)]
+        self._gen = {"cache": None, "tok": None, "out": [],
+                     "cache_len": S + max_new_tokens}
+        # all prompts are present at t=0: the continuous scheduler admits
+        # the whole call as one prefill iteration, then decodes in lockstep
+        sched = ContinuousScheduler(SchedulerConfig(max_batch=B), reqs)
+        self.run_loop(sched, max_iters=S + max_new_tokens + 2)
+        eams = [self.request_eams.pop(b, None) for b in range(B)]
+        out = np.stack(self._gen["out"], axis=1)
+        self._gen = None
         stats = dict(self.offload.stats(),
                      mean_token_latency=float(np.mean(self.token_latencies)))
-        return np.stack(out, axis=1), {"eams": eams, **stats}
+        return out, {"eams": eams, **stats}

@@ -67,6 +67,24 @@ def expert_bytes(cfg: ArchConfig, bytes_per_param: int = 2) -> int:
     return int(config_mod._ffn_params(cfg, m.d_expert) * bytes_per_param)
 
 
+def layer_time_mixed(cost: LayerCost, hw: HWConfig,
+                     token_ctx: "list[tuple[int, int]]",
+                     active_expert_tokens: float = 0.0) -> float:
+    """Seconds for one layer over a mixed iteration: ``token_ctx`` is one
+    ``(n_tokens, ctx_len)`` pair per live request, so a joining request's
+    prefill (many tokens, prompt-length context) and the running requests'
+    decode (one token each, their own context) are accounted separately
+    instead of lumping the batch under the max context. Weight bytes are
+    read once per iteration regardless of batch composition."""
+    flops = cost.expert_flops_per_token * active_expert_tokens
+    for n_tokens, ctx_len in token_ctx:
+        flops += (cost.flops_per_token * n_tokens
+                  + cost.attn_flops_per_token_per_ctx * n_tokens * ctx_len)
+    byts = cost.bytes_weights + cost.expert_bytes * (
+        1.0 if active_expert_tokens else 0.0)
+    return max(flops / hw.peak_flops, byts / (hw.hbm_gbps * 1e9))
+
+
 def layer_time(cost: LayerCost, hw: HWConfig, n_tokens: int, ctx_len: int,
                active_expert_tokens: float = 0.0) -> float:
     """Seconds for one layer over ``n_tokens`` (batch×new-tokens) with

@@ -1,10 +1,20 @@
-"""Inference request / batch types."""
+"""Inference request / batch types.
+
+A request's lifecycle under iteration-level scheduling is
+``waiting -> prefill -> decode -> done``: it waits until the continuous
+scheduler admits it at a token boundary, runs its prefill inside that
+iteration (mixed with other requests' decode), then decodes one token per
+iteration until ``max_new_tokens``. All engine-side state is keyed by
+``rid`` — request identity, not batch slot.
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import List
 
 import numpy as np
+
+WAITING, PREFILL, DECODE, DONE = "waiting", "prefill", "decode", "done"
 
 
 @dataclass
@@ -15,16 +25,27 @@ class Request:
     max_new_tokens: int
     task_id: int = 0               # which synthetic dataset/task produced it
     # filled by the engine
-    t_sched: float = 0.0           # when the batch started executing
+    state: str = WAITING
+    t_sched: float = 0.0           # when the request was admitted to the batch
     t_first: float = 0.0           # first-token time
     t_done: float = 0.0
     n_generated: int = 0
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
 
     @property
     def latency(self) -> float:
         """Per-request end-to-end latency (the paper reports per-token
         forward latency; we track both)."""
         return self.t_done - self.arrival
+
+    @property
+    def queue_delay(self) -> float:
+        """Time spent waiting for admission (the component continuous
+        batching removes)."""
+        return self.t_sched - self.arrival
 
     @property
     def per_token_latency(self) -> float:

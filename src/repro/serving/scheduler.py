@@ -1,23 +1,48 @@
-"""Request scheduler: AlpaServe-style batching (max batch 16 OR 1 s wait).
+"""Request schedulers.
 
-Pure event logic over arrival timestamps — the engine asks for the next
-batch given the current virtual time.
+Two scheduling models share one engine-facing protocol:
+
+* :class:`ContinuousScheduler` — iteration-level (Orca/vLLM-style)
+  scheduling, the default. Admission happens at every token boundary: an
+  arrived request joins the running set as soon as a slot is free, runs its
+  prefill inside the next iteration, and leaves on completion. A ``policy``
+  knob trades time-to-first-token against decode-iteration jitter.
+* :class:`StaticBatchScheduler` — the seed engine's AlpaServe-style model
+  (max batch 16 OR 1 s wait) kept reachable for regression and as the
+  queueing-delay baseline: a formed batch runs to completion while later
+  arrivals queue.
+
+The engine drives either through three calls: ``next_event(now)`` (when can
+new work start, used to jump virtual time when idle), ``admit(now)`` (which
+requests join the running set at this token boundary) and ``on_finish(rid)``.
+:class:`Scheduler` is the underlying static batch former (pure event logic
+over arrival timestamps).
 """
 from __future__ import annotations
 
+from bisect import insort
 from dataclasses import dataclass
 from typing import List, Optional
 
 from repro.serving.request import Batch, Request
 
+_EPS = 1e-12
+
 
 @dataclass
 class SchedulerConfig:
     max_batch: int = 16
-    max_wait: float = 1.0
+    max_wait: float = 1.0       # static mode: batch-formation deadline
+    # continuous mode: "prefill" admits every arrived request that fits
+    # (prefill-priority, minimizes TTFT); "decode" admits at most one new
+    # request per iteration so an arrival burst cannot blow up a decode
+    # iteration (decode-priority, minimizes decode jitter)
+    policy: str = "prefill"
 
 
 class Scheduler:
+    """Static batch former: max batch OR max-wait deadline (AlpaServe)."""
+
     def __init__(self, cfg: SchedulerConfig, requests: List[Request]):
         self.cfg = cfg
         self.pending = sorted(requests, key=lambda r: r.arrival)
@@ -53,3 +78,89 @@ class Scheduler:
         batch.t_formed = t_launch
         self.cursor = i
         return batch
+
+
+class ContinuousScheduler:
+    """Iteration-level scheduler: running set + waiting queue, join at any
+    token boundary, leave on completion."""
+
+    def __init__(self, cfg: SchedulerConfig, requests: List[Request] = ()):
+        self.cfg = cfg
+        self.waiting: List[Request] = sorted(requests,
+                                             key=lambda r: r.arrival)
+        self.n_running = 0
+
+    def add(self, request: Request) -> None:
+        """Dynamic arrival (online serving front-ends)."""
+        insort(self.waiting, request, key=lambda r: r.arrival)
+
+    def done(self) -> bool:
+        return not self.waiting and self.n_running == 0
+
+    def next_event(self, now: float) -> Optional[float]:
+        """Earliest time at which a waiting request can be admitted."""
+        return self.waiting[0].arrival if self.waiting else None
+
+    def admit(self, now: float) -> List[Request]:
+        free = self.cfg.max_batch - self.n_running
+        if free <= 0:
+            return []
+        if self.cfg.policy == "decode":
+            free = min(free, 1)
+        admitted: List[Request] = []
+        while (self.waiting and len(admitted) < free
+               and self.waiting[0].arrival <= now + _EPS):
+            admitted.append(self.waiting.pop(0))
+        self.n_running += len(admitted)
+        return admitted
+
+    def on_finish(self, rid: int) -> None:
+        self.n_running -= 1
+
+
+class StaticBatchScheduler:
+    """Seed-engine semantics behind the continuous-scheduler protocol: a
+    batch formed by :class:`Scheduler` is admitted whole once the engine is
+    idle and runs to completion; no joins mid-flight."""
+
+    def __init__(self, cfg: SchedulerConfig, requests: List[Request]):
+        self._inner = Scheduler(cfg, requests)
+        self._batch: Optional[Batch] = None
+        self.n_running = 0
+
+    def done(self) -> bool:
+        return (self._batch is None and self._inner.done()
+                and self.n_running == 0)
+
+    def _form(self, now: float) -> None:
+        if self._batch is None and not self._inner.done():
+            self._batch = self._inner.next_batch(now)
+
+    def next_event(self, now: float) -> Optional[float]:
+        if self.n_running:
+            return None
+        self._form(now)
+        return self._batch.t_formed if self._batch is not None else None
+
+    def admit(self, now: float) -> List[Request]:
+        if self.n_running:
+            return []
+        self._form(now)
+        if self._batch is None or self._batch.t_formed > now + _EPS:
+            return []
+        reqs = self._batch.requests
+        self._batch = None
+        self.n_running = len(reqs)
+        return reqs
+
+    def on_finish(self, rid: int) -> None:
+        self.n_running -= 1
+
+
+def make_scheduler(scheduling: str, cfg: SchedulerConfig,
+                   requests: List[Request]):
+    if scheduling == "continuous":
+        return ContinuousScheduler(cfg, requests)
+    if scheduling == "static":
+        return StaticBatchScheduler(cfg, requests)
+    raise ValueError(f"unknown scheduling mode: {scheduling!r}")

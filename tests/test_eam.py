@@ -1,7 +1,9 @@
 """EAM / EAMC unit + property tests (paper §4, Eq. 1)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.eam import EAMC, eam_distance, _row_normalize
 

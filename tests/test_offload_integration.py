@@ -29,7 +29,7 @@ def test_warm_start_topological():
 
 def test_on_layer_updates_cur_eam_and_stalls():
     eng = _engine()
-    eng.start_sequence()
+    eng.register_seq(0)
     counts = np.zeros(E); counts[5] = 3
     stall = eng.on_layer(2, counts, compute_time=1e-4)
     assert eng.ctx.cur_eam[2, 5] == 3
@@ -41,25 +41,73 @@ def test_on_layer_updates_cur_eam_and_stalls():
 
 def test_per_sequence_contexts_merge():
     eng = _engine()
-    eng.start_sequence(n_seqs=2)
+    eng.register_seq("a")
+    eng.register_seq("b")
     counts = np.zeros((2, E))
     counts[0, 1] = 4
     counts[1, 6] = 2
-    eng.on_layer(0, counts, 1e-4)
-    assert eng.seq_ctxs[0].cur_eam[0, 1] == 4
-    assert eng.seq_ctxs[1].cur_eam[0, 6] == 2
+    eng.on_layer(0, counts, 1e-4, rids=["a", "b"])
+    assert eng.seq_ctxs["a"].cur_eam[0, 1] == 4
+    assert eng.seq_ctxs["b"].cur_eam[0, 6] == 2
     assert eng.ctx.cur_eam[0, 1] == 4 and eng.ctx.cur_eam[0, 6] == 2
 
 
-def test_end_sequence_returns_eam_and_clears_queues():
+def test_finish_seq_frees_context_and_combined_eam():
+    """A finished request's counts stop influencing Alg. 2 cache scores."""
     eng = _engine()
-    eng.start_sequence()
+    eng.register_seq("a")
+    eng.register_seq("b")
+    counts = np.zeros((2, E))
+    counts[0, 1] = 4
+    counts[1, 6] = 2
+    eng.on_layer(0, counts, 1e-4, rids=["a", "b"])
+    eam_a = eng.finish_seq("a")
+    assert eam_a[0, 1] == 4
+    assert "a" not in eng.seq_ctxs and "b" in eng.seq_ctxs
+    assert eng.ctx.cur_eam[0, 1] == 0      # a's counts removed
+    assert eng.ctx.cur_eam[0, 6] == 2      # b's counts remain
+    eng.finish_seq("b")
+    assert not eng.seq_ctxs
+    assert eng.ctx.cur_eam.sum() == 0
+
+
+def test_finish_seq_returns_eam_and_clears_queues_when_idle():
+    eng = _engine()
+    eng.register_seq(0)
     counts = np.zeros(E); counts[0] = 2
     eng.on_layer(1, counts, 1e-4)
-    eam = eng.end_sequence()
+    eam = eng.finish_seq(0)
     assert eam[1, 0] == 2
     assert eng.sim.gpu_link.queue_len() == 0
     assert eng.sim.ssd_link.queue_len() == 0
+
+
+def test_gpu_eviction_demotes_to_dram_tier():
+    """A GPU-evicted expert falls back to DRAM residency instead of being
+    dropped (its next demand fetch pays the PCIe link, not SSD)."""
+    cfg = OffloadConfig(n_moe_layers=L, n_experts=E, expert_bytes=10_000_000,
+                        gpu_cache_experts=4, dram_cache_experts=32,
+                        cache_policy="lru", prefetch="none")
+    eng = OffloadEngine(cfg)
+    eng.register_seq(0)
+    # touch experts beyond GPU capacity in layer 1 to force GPU evictions
+    counts = np.zeros(E); counts[:6] = 1
+    eng.on_layer(1, counts, 1e-4)
+    evicted_layer0 = [k for k in [(0, e) for e in range(4)]
+                      if k not in eng.gpu_cache]
+    assert evicted_layer0                      # something was demoted
+    for k in evicted_layer0:
+        assert k in eng.dram_cache and k in eng.sim.in_dram
+
+
+def test_neighbor_cache_on_insert_updates_layer_group():
+    from repro.core.cache import NeighborAwareCache
+    pol = NeighborAwareCache()
+    pol.on_insert((2, 5), now=0.0)
+    assert pol.layer_last.get(2) == pol.last[(2, 5)]
+    # a later same-layer insert refreshes the group timestamp
+    pol.on_insert((2, 6), now=0.0)
+    assert pol.layer_last[2] == pol.last[(2, 6)]
 
 
 def test_prefetch_reduces_first_touch_stall():
@@ -75,7 +123,7 @@ def test_prefetch_reduces_first_touch_stall():
                             expert_bytes=10_000_000, gpu_cache_experts=4,
                             dram_cache_experts=32, prefetch=prefetch)
         eng = OffloadEngine(cfg, eamc=eamc)
-        eng.start_sequence()
+        eng.register_seq(0)
         total = 0.0
         counts = np.zeros(E); counts[3] = 10
         for l in range(L):
@@ -99,6 +147,7 @@ def test_jax_model_server_generates_and_traces():
     n_moe = len(model.moe_layers)
     for eam in stats["eams"]:
         assert eam.shape == (n_moe, arch.moe.n_experts)
-        # (prompt 8 tokens + 4 decode steps) × top_k, per MoE layer
-        assert eam.sum() == (8 + 4) * arch.moe.top_k * n_moe
+        # prompt 8 tokens + 3 decode iterations (the prefill iteration
+        # emits the first of the 4 generated tokens) × top_k, per MoE layer
+        assert eam.sum() == (8 + 4 - 1) * arch.moe.top_k * n_moe
     assert stats["mean_token_latency"] > 0

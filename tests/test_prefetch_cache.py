@@ -1,7 +1,9 @@
 """Algorithm 1 (prefetch priorities) and Algorithm 2 (cache replacement)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.cache import (ActivationAwareCache, EPSILON, ExpertCache,
                               LFUCache, LRUCache, NeighborAwareCache,
