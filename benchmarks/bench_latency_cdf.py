@@ -14,14 +14,14 @@ import numpy as np
 from benchmarks.common import build_engine, emit, run_workload
 
 
-def main(quick=True, scheduling="continuous"):
+def main(quick=True, scheduling="continuous", policy="prefill"):
     n = 30 if quick else 100
     modes = ["static", "continuous"] if scheduling == "both" else [scheduling]
     for load, rps in (("low", 0.5), ("high", 6.0)):
         for system in ("moe-infinity", "pytorch-um"):
             for mode in modes:
                 eng = build_engine("switch-large-128", system,
-                                   scheduling=mode)
+                                   scheduling=mode, policy=policy)
                 reqs = run_workload(eng, n_requests=n, rps=rps, seed=11)
                 lat = np.array(eng.token_latencies) * 1000
                 e2e = np.array([r.latency for r in reqs]) * 1000
@@ -39,8 +39,10 @@ if __name__ == "__main__":
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--scheduling", default="both",
                     choices=["static", "continuous", "both"])
+    ap.add_argument("--policy", default="prefill",
+                    choices=["prefill", "decode", "stall"])
     args = ap.parse_args()
     if not args.full:
         print("# quick mode (30 requests); pass --full for the "
               "paper-scale Fig 5 CDFs")
-    main(quick=not args.full, scheduling=args.scheduling)
+    main(quick=not args.full, scheduling=args.scheduling, policy=args.policy)

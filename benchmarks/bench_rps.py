@@ -6,6 +6,13 @@ seed engine's batch-to-completion scheduling, ``both`` runs the two
 back-to-back and reports how often continuous wins on mean end-to-end
 latency at the same request rate (queueing delay no longer serialized per
 batch).
+
+``--policy`` selects the continuous-mode admission policy: ``prefill``
+(admit everything that fits), ``decode`` (one prefill per iteration), or
+``stall`` (stall-aware admission — defer a prefill whose predicted
+cold-expert union against the live GPU cache exceeds the budget; the
+DESIGN.md §1 fix for expert-transfer-bound regimes like nllb-moe-128 at
+>=2 rps where plain continuous batching loses end-to-end to static).
 """
 from __future__ import annotations
 
@@ -20,7 +27,7 @@ MODELS = ["switch-base-128", "switch-base-256", "switch-large-128",
 SYSTEMS = ["moe-infinity", "pytorch-um", "zero-style"]
 
 
-def main(quick=True, scheduling="continuous"):
+def main(quick=True, scheduling="continuous", policy="prefill"):
     rps_list = [0.5, 2.0] if quick else [0.5, 1.0, 2.0, 4.0, 8.0]
     models = MODELS[:2] if quick else MODELS
     n = 24 if quick else 80
@@ -31,7 +38,8 @@ def main(quick=True, scheduling="continuous"):
         for system in SYSTEMS:
             for rps in rps_list:
                 for mode in modes:
-                    eng = build_engine(model, system, scheduling=mode)
+                    eng = build_engine(model, system, scheduling=mode,
+                                       policy=policy)
                     reqs = run_workload(eng, n_requests=n, rps=rps)
                     lat = eng.stats()["mean_token_latency"]
                     results[(model, system, rps, mode)] = lat
@@ -65,8 +73,11 @@ if __name__ == "__main__":
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--scheduling", default="both",
                     choices=["static", "continuous", "both"])
+    ap.add_argument("--policy", default="prefill",
+                    choices=["prefill", "decode", "stall"],
+                    help="continuous-mode admission policy")
     args = ap.parse_args()
     if not args.full:
         print("# quick mode (2 models x 2 rates); pass --full for the "
               "paper-scale Fig 4 sweep")
-    main(quick=not args.full, scheduling=args.scheduling)
+    main(quick=not args.full, scheduling=args.scheduling, policy=args.policy)

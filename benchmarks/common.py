@@ -60,7 +60,8 @@ SYSTEMS = {
 def build_engine(arch_id="switch-base-128", system="moe-infinity", *,
                  gpu_slots=None, dram_slots=None, eamc=None, oracle=None,
                  hw=None, max_batch=16, seed=0, topk_all=True,
-                 scheduling="continuous"):
+                 scheduling="continuous", policy="prefill",
+                 keep_request_eams=False):
     arch = get_config(arch_id)
     oracle = oracle or build_oracle(arch)
     eamc = eamc if eamc is not None else build_eamc(arch, oracle)
@@ -68,7 +69,7 @@ def build_engine(arch_id="switch-base-128", system="moe-infinity", *,
     total = E * L
     gpu_slots = gpu_slots if gpu_slots is not None else total // 5
     dram_slots = dram_slots if dram_slots is not None else (2 * total) // 3
-    policy, prefetch = SYSTEMS[system]
+    cache_policy, prefetch = SYSTEMS[system]
     # CUDA-UM baseline: page-fault handling per on-demand migration —
     # ~25 us per 2 MiB fault batch (driver fault storm; the paper observes
     # <10% GPU utilization for PYTORCH-UM under load, §8.2)
@@ -76,12 +77,17 @@ def build_engine(arch_id="switch-base-128", system="moe-infinity", *,
     demand_overhead = 0.0
     if system == "pytorch-um":
         demand_overhead = 25e-6 * (_ebytes(arch, 4) / 2e6)
+    # long replays: finished requests' (L, E) EAMs are not retained unless a
+    # caller needs them (drift analysis / invariance tests opt back in)
     cfg = EngineConfig(arch=arch, gpu_cache_experts=gpu_slots,
-                       dram_cache_experts=dram_slots, cache_policy=policy,
+                       dram_cache_experts=dram_slots,
+                       cache_policy=cache_policy,
                        prefetch=prefetch, bytes_per_param=4,
                        hw=hw or HWConfig(),
-                       scheduler=SchedulerConfig(max_batch=max_batch),
+                       scheduler=SchedulerConfig(max_batch=max_batch,
+                                                 policy=policy),
                        scheduling=scheduling,
+                       keep_request_eams=keep_request_eams,
                        demand_overhead_s=demand_overhead)
     prefetcher = None
     if prefetch == "topk":

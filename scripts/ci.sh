@@ -4,12 +4,21 @@
 #
 #   scripts/ci.sh            # quick: install + pytest
 #   SKIP_INSTALL=1 scripts/ci.sh
+#   SMOKE=1 scripts/ci.sh    # additionally run the real-JAX serving path
+#                            # end to end (slot-pool engine, ragged
+#                            # requests, Poisson arrivals) under a timeout
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 if [ -z "${SKIP_INSTALL:-}" ]; then
     python -m pip install -q -r requirements-dev.txt || \
         echo "ci.sh: pip install failed (offline?); running with baked-in deps"
+fi
+
+if [ -n "${SMOKE:-}" ]; then
+    echo "ci.sh: SMOKE tier — model-mode serve end to end"
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout "${SMOKE_TIMEOUT:-300}" \
+        python -m repro.launch.serve --reduced --requests 4
 fi
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -10,8 +10,12 @@ One generated token's query attends to a KV cache of up to 524k positions
 - Online softmax: running (m, l, acc) scratch in VMEM, revisited across the
   S grid dimension (sequential innermost dim), so the KV cache streams
   HBM→VMEM exactly once.
-- ``cache_len`` arrives as a scalar-prefetch operand (SMEM); blocks beyond
-  it are masked before the running-max update.
+- ``cache_len`` arrives as a scalar-prefetch operand (SMEM); positions
+  beyond it are masked before the running-max update. It may be a scalar
+  (batch-shared length, the lockstep path) or a ``(B,)`` vector of
+  *per-slot* lengths — under slot-pool continuous batching every sequence
+  in the pool sits at its own decode position, so each batch row masks its
+  own valid prefix (indexed via ``program_id(0)`` from SMEM).
 """
 from __future__ import annotations
 
@@ -27,6 +31,7 @@ NEG_INF = -1e30
 
 def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
             *, bs: int, scale: float):
+    b = pl.program_id(0)
     s = pl.program_id(2)
 
     @pl.when(s == 0)
@@ -40,7 +45,7 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
     v = v_ref[0, :, 0, :]                             # (bs, hd)
     scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
     pos = s * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
-    scores = jnp.where(pos < len_ref[0], scores, NEG_INF)   # (rep, bs)
+    scores = jnp.where(pos < len_ref[b], scores, NEG_INF)   # (rep, bs)
 
     m_prev, l_prev = m_ref[...], l_ref[...]
     m_cur = jnp.max(scores, axis=-1, keepdims=True)   # (rep, 1)
@@ -61,7 +66,8 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 def flash_decode(q, k, v, cache_len, *, block_s: int = 512,
                  interpret: bool = False):
     """q: (B, H, hd); k/v: (B, S, Hkv, hd); cache_len: int32 scalar (valid
-    prefix length of the cache). -> (B, H, hd)."""
+    prefix length of the cache, batch-shared) or (B,) vector of per-slot
+    lengths. -> (B, H, hd)."""
     B, H, hd = q.shape
     S, Hkv = k.shape[1], k.shape[2]
     assert H % Hkv == 0
@@ -71,7 +77,8 @@ def flash_decode(q, k, v, cache_len, *, block_s: int = 512,
     qg = q.reshape(B, Hkv, rep, hd)
     grid = (B, Hkv, S // bs)
     scale = hd ** -0.5
-    lens = jnp.asarray(cache_len, jnp.int32).reshape(1)
+    lens = jnp.broadcast_to(
+        jnp.asarray(cache_len, jnp.int32).reshape(-1), (B,))
 
     out = pl.pallas_call(
         functools.partial(_kernel, bs=bs, scale=scale),

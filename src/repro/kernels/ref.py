@@ -26,7 +26,8 @@ def moe_ffn_ref(xg, w_gate, w_up, w_down, *, act: str = "swiglu"):
 
 
 def flash_decode_ref(q, k, v, cache_len):
-    """q: (B, H, hd); k/v: (B, S, Hkv, hd)."""
+    """q: (B, H, hd); k/v: (B, S, Hkv, hd); cache_len scalar or (B,)
+    per-slot lengths."""
     B, H, hd = q.shape
     S, Hkv = k.shape[1], k.shape[2]
     rep = H // Hkv
@@ -34,6 +35,9 @@ def flash_decode_ref(q, k, v, cache_len):
     v = jnp.repeat(v, rep, axis=2)
     scores = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
                         k.astype(jnp.float32)) * hd ** -0.5
+    cache_len = jnp.asarray(cache_len)
+    if cache_len.ndim:
+        cache_len = cache_len.reshape(-1, 1, 1)
     mask = jnp.arange(S)[None, None, :] < cache_len
     scores = jnp.where(mask, scores, -1e30)
     wts = jax.nn.softmax(scores, axis=-1)

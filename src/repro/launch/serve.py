@@ -1,7 +1,14 @@
 """Serving launcher: wires a (possibly sharded) model + the offload engine
-into a request loop. On this CPU container it runs reduced configs end to
-end; on real hardware the same entry point takes the full config + the
-production mesh.
+into an open-loop request loop. On this CPU container it runs reduced
+configs end to end; on real hardware the same entry point takes the full
+config + the production mesh.
+
+Requests arrive per a Poisson process with per-request (ragged) prompt
+lengths and token budgets; the slot-pool ``JaxModelServer`` admits them at
+token boundaries through the continuous scheduler (``--policy`` selects
+prefill-priority, decode-priority, or stall-aware admission) and recycles
+batch slots on completion — no lockstep batching, no recompiles after
+warmup.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-moe-235b-a22b \
         --reduced --requests 8
@@ -16,8 +23,10 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.tracer import build_eamc
 from repro.models import Model
-from repro.serving import EngineConfig
+from repro.serving import EngineConfig, SchedulerConfig
 from repro.serving.engine import JaxModelServer
+from repro.serving.request import Request
+from repro.serving.workload import poisson_arrivals
 from repro.train.data import DataConfig, TokenStream
 
 
@@ -27,11 +36,22 @@ def main(argv=None):
     ap.add_argument("--reduced", action="store_true",
                     help="serve the smoke-scale variant (CPU-friendly)")
     ap.add_argument("--requests", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=8)
-    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--rps", type=float, default=2.0,
+                    help="open-loop Poisson arrival rate (virtual-clock)")
+    ap.add_argument("--prompt-len", type=int, default=8,
+                    help="max prompt length; requests draw ragged lengths "
+                         "from [max(4, len//2), len]")
+    ap.add_argument("--max-new", type=int, default=8,
+                    help="max token budget; per-request budgets are ragged")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="slot-pool capacity (fixed decode batch shape)")
+    ap.add_argument("--policy", default="prefill",
+                    choices=["prefill", "decode", "stall"],
+                    help="continuous-admission policy")
     ap.add_argument("--gpu-cache", type=int, default=4)
     ap.add_argument("--dram-cache", type=int, default=8)
     ap.add_argument("--eamc-capacity", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -51,21 +71,47 @@ def main(argv=None):
     def run_fn(seq):
         return np.asarray(fwd(params, {"tokens": seq[None]}))[:, 0, :]
 
-    dataset = [b["tokens"][0] for b in data.batches(10)]
+    dataset = [b["tokens"][0] for b in data.batches(max(10, args.requests))]
     eamc = build_eamc(run_fn, dataset, capacity=args.eamc_capacity)
 
     srv = JaxModelServer(
         EngineConfig(arch=cfg, gpu_cache_experts=args.gpu_cache,
-                     dram_cache_experts=args.dram_cache),
-        model, params, eamc=eamc)
-    n_b = max(1, args.requests // 2)
-    for i in range(n_b):
-        prompts = np.stack([np.asarray(d[: args.prompt_len])
-                            for d in dataset[2 * i : 2 * i + 2]])
-        out, stats = srv.generate(prompts, max_new_tokens=args.max_new)
-        print(f"batch {i}: generated {out.shape}, "
-              f"hit={stats['gpu_hit_ratio']:.3f}, "
-              f"tok-lat={stats['mean_token_latency']*1e3:.2f}ms")
+                     dram_cache_experts=args.dram_cache,
+                     scheduler=SchedulerConfig(max_batch=args.slots,
+                                               policy=args.policy),
+                     keep_request_eams=False),
+        model, params, eamc=eamc,
+        cache_len=args.prompt_len + args.max_new)
+
+    # open loop: every request is submitted up front with its Poisson
+    # arrival timestamp; the engine's virtual clock drives admission
+    rng = np.random.default_rng(args.seed)
+    arrivals = poisson_arrivals(args.requests, rps=args.rps, seed=args.seed)
+    reqs = []
+    for i in range(args.requests):
+        plen = int(rng.integers(max(4, args.prompt_len // 2),
+                                args.prompt_len + 1))
+        budget = int(rng.integers(max(2, args.max_new // 2),
+                                  args.max_new + 1))
+        prompt = np.asarray(dataset[i % len(dataset)][:plen], np.int32)
+        reqs.append(Request(rid=i, arrival=float(arrivals[i]), prompt=prompt,
+                            max_new_tokens=budget))
+        srv.submit(reqs[-1])
+    srv.drain()
+
+    stats = srv.stats()
+    for r in reqs:
+        toks = srv.generated.pop(r.rid)
+        print(f"req {r.rid}: prompt={r.prompt_len} new={len(toks)} "
+              f"slotwait={r.queue_delay*1e3:.1f}ms "
+              f"e2e={r.latency*1e3:.1f}ms "
+              f"tok-lat={r.per_token_latency*1e3:.2f}ms")
+    e2e = np.mean([r.latency for r in reqs])
+    print(f"total: {args.requests} requests, policy={args.policy}, "
+          f"hit={stats['gpu_hit_ratio']:.3f}, "
+          f"mean-tok-lat={stats['mean_token_latency']*1e3:.2f}ms, "
+          f"mean-e2e={e2e*1e3:.1f}ms, "
+          f"compiles={dict(srv.compile_counts)}")
 
 
 if __name__ == "__main__":

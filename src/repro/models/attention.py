@@ -169,14 +169,30 @@ def causal_mask(S: int, T: int, offset: int = 0, window: int = 0):
 
 
 def decode_mask(T: int, cache_len, window: int = 0):
-    """Mask for a single-token query attending to a (B-shared) cache of
-    physical length T, logically filled to ``cache_len`` (inclusive of the
-    current token at cache_len-1)."""
+    """Mask for a single-token query attending to a cache of physical length
+    T, logically filled to ``cache_len`` (inclusive of the current token at
+    cache_len-1). ``cache_len`` may be a scalar (batch-shared length) or a
+    ``(B,)`` vector of per-slot lengths (the slot-pool decode path, where
+    every sequence in the pool sits at its own position)."""
     kpos = jnp.arange(T)[None, None, None, :]
+    cache_len = jnp.asarray(cache_len)
+    if cache_len.ndim:
+        cache_len = cache_len.reshape(-1, 1, 1, 1)
     ok = kpos < cache_len
     if window:
         ok &= kpos >= cache_len - window
     return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def update_rows(buf, upd, pos):
+    """Write ``upd`` (B, n, ...) into ``buf`` (B, T, ...) at per-row position
+    ``pos`` ((B,) int32 vector, or scalar for the batch-shared legacy path).
+    The vmap'd dynamic_update_slice is the slot-pool cache write: each slot
+    appends at its own sequence position."""
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (buf.shape[0],))
+    return jax.vmap(
+        lambda b, u, p: jax.lax.dynamic_update_slice_in_dim(b, u, p, 0)
+    )(buf, upd.astype(buf.dtype), pos)
 
 
 # ---------------------------------------------------------------------------
@@ -241,8 +257,10 @@ def cross_kv(p, cfg: ArchConfig, enc_out):
 
 def attn_decode(p, cfg: ArchConfig, x, cache_k, cache_v, pos, *,
                 window: int = 0, cross: bool = False):
-    """One-token decode. x (B,1,d); cache_k/v (B,T,Hkv,hd); pos scalar index of
-    the new token. Returns (out, new_k_cache, new_v_cache)."""
+    """One-token decode. x (B,1,d); cache_k/v (B,T,Hkv,hd); pos is the index
+    of the new token — a scalar (batch-shared) or a (B,) vector of per-slot
+    positions (slot-pool mode: every sequence writes and masks at its own
+    length). Returns (out, new_k_cache, new_v_cache)."""
     a = cfg.attn
     if cross:
         q = jnp.einsum("bsd,dhk->bshk", x, p["w_q"])
@@ -251,12 +269,13 @@ def attn_decode(p, cfg: ArchConfig, x, cache_k, cache_v, pos, *,
         mask = jnp.zeros((1, 1, 1, 1), jnp.float32)
         out = _sdpa(q, cache_k, cache_v, mask, a.logit_softcap)
         return jnp.einsum("bshk,hkd->bsd", out, p["w_o"]), cache_k, cache_v
-    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (x.shape[0],))
+    positions = pos[:, None]
     if a.mrope_sections:
         positions = jnp.broadcast_to(positions, (3,) + positions.shape)
     q, k, v = _project_qkv(p, cfg, x, positions)
-    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), pos, 1)
-    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), pos, 1)
+    cache_k = update_rows(cache_k, k, pos)
+    cache_v = update_rows(cache_v, v, pos)
     mask = decode_mask(cache_k.shape[1], pos + 1, window=window)
     out = _sdpa(q, cache_k, cache_v, mask, a.logit_softcap)
     return jnp.einsum("bshk,hkd->bsd", out, p["w_o"]), cache_k, cache_v
@@ -305,16 +324,16 @@ def mla_forward(p, cfg: ArchConfig, x, positions, mask=None):
 
 def mla_decode(p, cfg: ArchConfig, x, cache_ckv, cache_kr, pos):
     """Absorbed-matrix MLA decode: attention runs in the compressed latent
-    space (the serving-efficient path from the DeepSeek-V2 paper)."""
+    space (the serving-efficient path from the DeepSeek-V2 paper). ``pos``
+    may be a scalar or a (B,) per-slot position vector."""
     m = cfg.attn.mla
     B = x.shape[0]
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos[:, None]
     q_nope, q_rope = _mla_q(p, cfg, x, positions)            # (B,1,H,*)
     c_kv, k_rope = _mla_latents(p, cfg, x, positions)        # (B,1,r), (B,1,rope)
-    cache_ckv = jax.lax.dynamic_update_slice_in_dim(
-        cache_ckv, c_kv.astype(cache_ckv.dtype), pos, 1)
-    cache_kr = jax.lax.dynamic_update_slice_in_dim(
-        cache_kr, k_rope.astype(cache_kr.dtype), pos, 1)
+    cache_ckv = update_rows(cache_ckv, c_kv, pos)
+    cache_kr = update_rows(cache_kr, k_rope, pos)
     # Absorb W_uk into q: q_abs (B,1,H,r)
     q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"])
     scores = (jnp.einsum("bshr,btr->bhst", q_abs, cache_ckv)

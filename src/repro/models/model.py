@@ -171,7 +171,8 @@ class Model:
 
     # -- full-sequence block application ------------------------------------
     def _apply_block(self, p, desc: LayerDesc, x, positions, *,
-                     enc_kv=None, capacity_factor=None, expert_fn=None):
+                     enc_kv=None, capacity_factor=None, expert_fn=None,
+                     token_mask=None):
         cfg = self.cfg
         aux = {}
         h = apply_norm(p["norm1"], x)
@@ -203,7 +204,7 @@ class Model:
         elif desc.is_moe:
             y2, moe_aux = moe_ffn(p["moe"], cfg, h2,
                                   capacity_factor=capacity_factor,
-                                  expert_fn=expert_fn)
+                                  expert_fn=expert_fn, token_mask=token_mask)
             aux["counts"] = moe_aux["counts"]
             aux["aux_loss"] = moe_aux["aux_loss"]
         else:
@@ -370,9 +371,13 @@ class Model:
 
     def init_cache(self, B: int, cache_len: int, decode_window: int = 0):
         """Zeroed decode cache. ``decode_window``: cap attention caches to a
-        ring buffer of this many tokens (the long_500k windowed variant)."""
+        ring buffer of this many tokens (the long_500k windowed variant).
+
+        ``pos`` is a per-slot (B,) vector: under the slot-pool serving
+        engine every batch row is an independent sequence at its own
+        position; lockstep callers simply keep all rows equal."""
         cache = {
-            "pos": jnp.zeros((), jnp.int32),
+            "pos": jnp.zeros((B,), jnp.int32),
             "prefix": [self._block_cache(self.descs[i], B, cache_len,
                                          decode_window)
                        for i in range(self.n_prefix)],
@@ -388,10 +393,37 @@ class Model:
         # static python int under jit) — pass it to serve_step explicitly.
         return cache
 
+    def write_slot(self, pool, one, slot):
+        """Write a B=1 cache ``one`` into row ``slot`` of a pooled cache
+        (same ``cache_len``). This is slot-pool admission: a joining
+        request's per-request prefill lands in a free slot while the other
+        slots' state is untouched. ``slot`` may be a traced int32 scalar, so
+        one jitted prefill-and-place compiles per prompt bucket, not per
+        slot index."""
+        out = {"pos": pool["pos"].at[slot].set(one["pos"][0])}
+        out["prefix"] = [
+            jax.tree.map(
+                lambda pb, ob: jax.lax.dynamic_update_slice_in_dim(
+                    pb, ob.astype(pb.dtype), slot, 0), pb_i, ob_i)
+            for pb_i, ob_i in zip(pool["prefix"], one["prefix"])]
+        # block leaves carry the scan-group axis first: batch is axis 1
+        out["blocks"] = [
+            jax.tree.map(
+                lambda pb, ob: jax.lax.dynamic_update_slice_in_dim(
+                    pb, ob.astype(pb.dtype), slot, 1), pb_j, ob_j)
+            for pb_j, ob_j in zip(pool["blocks"], one["blocks"])]
+        return out
+
     # -- decode-path block ----------------------------------------------------
     def _decode_block(self, p, desc: LayerDesc, bc, x, pos, decode_window,
-                      expert_fn=None):
+                      expert_fn=None, active=None):
+        """One-token decode through one block. ``pos`` may be a (B,) per-slot
+        position vector; ``active`` an optional (B,) bool mask — cache rows of
+        inactive slots are left untouched (attention K/V, ring pointers, and
+        recurrent mamba/rwkv state all stay frozen), so free or
+        just-prefilled slots in a slot pool never advance their state."""
         cfg = self.cfg
+        prev = dict(bc)
         win = desc.window or decode_window
         counts = None
         h = apply_norm(p["norm1"], x)
@@ -436,6 +468,10 @@ class Model:
             y2 = apply_ffn(p["ffn"], h2, cfg.act)
         if cfg.post_block_norm:
             y2 = apply_norm(p["post_norm2"], y2)
+        if active is not None:
+            bc = {key: (val if val is prev[key]
+                        else _gate_rows(active, val, prev[key]))
+                  for key, val in bc.items()}
         return x + y2, bc, counts
 
     @staticmethod
@@ -447,14 +483,30 @@ class Model:
         return pos
 
     # -- public: prefill / serve_step -----------------------------------------
-    def prefill(self, params, batch, cache, *, expert_fn=None):
+    def prefill(self, params, batch, cache, *, expert_fn=None,
+                true_len=None):
         """Run the full prompt, fill the cache, return last-token logits.
 
         For window-capped caches the prompt must fit the window (the serving
-        engine chunks longer prompts through serve_step)."""
+        engine chunks longer prompts through serve_step).
+
+        ``true_len``: optional per-row real prompt length ((B,) vector or
+        scalar) for right-padded ragged prefill (slot-pool admission). Pad
+        tokens beyond ``true_len`` are causally invisible to real queries,
+        take no MoE capacity, contribute no expert counts, and the returned
+        logits come from each row's *last real* token. Their K/V garbage sits
+        at cache positions >= true_len, masked during decode and overwritten
+        as the sequence grows. Recurrent (mamba/rwkv) prefill state is NOT
+        pad-corrected — the serving engine prefills those families at exact
+        lengths (see JaxModelServer)."""
         cfg = self.cfg
         x, positions = self._embed(params, batch)
         B, S = x.shape[:2]
+        token_mask = None
+        if true_len is not None:
+            true_len = jnp.broadcast_to(
+                jnp.asarray(true_len, jnp.int32), (B,))
+            token_mask = jnp.arange(S)[None, :] < true_len[:, None]
         enc_out = None
         if cfg.is_encoder_decoder:
             enc_out = self._encode(params, batch["enc_embeds"])
@@ -467,7 +519,8 @@ class Model:
                 ekv = attn_lib.cross_kv(p["cross_attn"], cfg, enc_out)
             h2, aux = self._apply_block(p, desc, h, positions, enc_kv=ekv,
                                         capacity_factor=2.0,
-                                        expert_fn=expert_fn)
+                                        expert_fn=expert_fn,
+                                        token_mask=token_mask)
             if desc.kind == BLOCK_ATTN:
                 if cfg.attn.mla is not None:
                     ckv, kr = aux["kv"]
@@ -527,20 +580,35 @@ class Model:
             if scan_counts.ndim > 2:
                 counts_all.append(scan_counts.reshape(-1, *scan_counts.shape[2:]))
 
-        cache["pos"] = jnp.asarray(S, jnp.int32)
-        x_last = apply_norm(params["final_norm"], x_cur[:, -1:])
+        if true_len is None:
+            cache["pos"] = jnp.full((B,), S, jnp.int32)
+            x_last = x_cur[:, -1:]
+        else:
+            cache["pos"] = true_len
+            # each row's last *real* token feeds the logits
+            x_last = jnp.take_along_axis(
+                x_cur, (true_len - 1)[:, None, None], axis=1)
+        x_last = apply_norm(params["final_norm"], x_last)
         logits = self._logits(params, x_last)[:, 0]
         aux = {"counts": (jnp.concatenate(counts_all, 0) if counts_all else None)}
         return logits, cache, aux
 
     def serve_step(self, params, cache, token_or_embeds, *, expert_fn=None,
-                   decode_window: int = 0):
+                   decode_window: int = 0, active=None):
         """One decode step. ``token_or_embeds``: (B,) int tokens or (B,1,d)
         embeddings. ``decode_window``: static int; must match the
         ``decode_window`` the cache was initialized with.
+
+        ``active``: optional (B,) bool mask for slot-pool serving — rows of
+        inactive slots are computed (the batch shape is fixed) but their
+        cache state, position and counts are left untouched, so a free slot
+        can carry arbitrary garbage without perturbing live sequences.
         Returns (logits (B,V), cache, aux)."""
         cfg = self.cfg
-        pos = cache["pos"]
+        B = token_or_embeds.shape[0]
+        pos = jnp.broadcast_to(jnp.asarray(cache["pos"], jnp.int32), (B,))
+        if active is not None:
+            active = jnp.asarray(active, bool)
         if token_or_embeds.ndim == 1:
             x = params["embed"][token_or_embeds][:, None]
         else:
@@ -548,7 +616,7 @@ class Model:
         if cfg.embed_scale:
             x = x * jnp.asarray(cfg.d_model ** 0.5, self.dtype)
         if not cfg.attn.use_rope:
-            x = x + params["pos_embed"][pos][None, None]
+            x = x + params["pos_embed"][pos][:, None]
 
         counts_all = []
         new_prefix = []
@@ -556,7 +624,7 @@ class Model:
         for i in range(self.n_prefix):
             x_cur, bc, cnt = self._decode_block(
                 params["prefix"][i], self.descs[i], dict(cache["prefix"][i]),
-                x_cur, pos, decode_window, expert_fn=expert_fn)
+                x_cur, pos, decode_window, expert_fn=expert_fn, active=active)
             new_prefix.append(bc)
             if cnt is not None:
                 counts_all.append(cnt[None])
@@ -571,7 +639,7 @@ class Model:
                 for posn in range(self.period):
                     h, bc, cnt = self._decode_block(
                         block_params[posn], descs[posn], dict(bcs[posn]), h,
-                        pos, decode_window, expert_fn=expert_fn)
+                        pos, decode_window, expert_fn=expert_fn, active=active)
                     new_bcs.append(bc)
                     if cnt is not None:
                         g_counts.append(cnt)
@@ -586,11 +654,22 @@ class Model:
             if scan_counts.ndim > 2:
                 counts_all.append(scan_counts.reshape(-1, *scan_counts.shape[2:]))
 
-        cache["pos"] = pos + 1
+        cache["pos"] = pos + (1 if active is None
+                              else active.astype(jnp.int32))
         x_last = apply_norm(params["final_norm"], x_cur)
         logits = self._logits(params, x_last)[:, 0]
-        aux = {"counts": (jnp.concatenate(counts_all, 0) if counts_all else None)}
+        counts = jnp.concatenate(counts_all, 0) if counts_all else None
+        if counts is not None and active is not None:
+            counts = counts * active.astype(counts.dtype)[None, :, None]
+        aux = {"counts": counts}
         return logits, cache, aux
+
+
+def _gate_rows(active, new, old):
+    """Per-row select: keep ``old`` rows where ``active`` is False (slot-pool
+    mode — frozen slots must not advance KV, ring, or recurrent state)."""
+    a = active.reshape((-1,) + (1,) * (new.ndim - 1))
+    return jnp.where(a, new, old)
 
 
 def _seed(buf, full):

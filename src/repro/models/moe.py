@@ -65,6 +65,20 @@ def capacity(T: int, m: MoEConfig, factor: float | None = None) -> int:
     return max(m.top_k, min(c, T))
 
 
+def _traced_capacity(n_tokens, m: MoEConfig, factor: float | None):
+    """``capacity`` over a *traced* token count (same formula, jnp ops).
+
+    Padded ragged prefill keeps the static block shape C(T_padded) but must
+    drop tokens exactly as an exact-length prefill would — i.e. at
+    C(T_real), which is only known at run time. C is monotone in T, so the
+    traced bound never exceeds the static shape. (The arithmetic runs in
+    f32 rather than python f64; all assigned configs have power-of-two
+    n_experts, where T·k/E·f is exact and the floor cannot flip.)"""
+    f = m.capacity_factor if factor is None else factor
+    c = jnp.floor(n_tokens * m.top_k / m.n_experts * f).astype(jnp.int32) + 1
+    return jnp.maximum(m.top_k, jnp.minimum(c, n_tokens))
+
+
 def route(p, m: MoEConfig, xf):
     """xf (T, d) -> (gates (T,k), idx (T,k), probs (T,E))."""
     logits = (xf.astype(jnp.float32) @ p["w_router"])
@@ -76,17 +90,21 @@ def route(p, m: MoEConfig, xf):
 
 
 def moe_ffn(p, cfg: ArchConfig, x, *, capacity_factor: float | None = None,
-            expert_fn=None):
+            expert_fn=None, token_mask=None):
     """Apply the routed MoE to x (B, S, d).
 
     Returns (y, aux) where aux = {"counts": (B, E) int32 per-sequence expert
     activation counts (an EAM row), "aux_loss": load-balance loss scalar}.
     ``expert_fn``: optional override for the grouped expert computation with
     signature (xg (E,C,d), p) -> (E,C,d) — the Pallas kernel hook.
+    ``token_mask``: optional (B, S) bool validity mask (slot-pool padded
+    prefill): masked-out tokens are routed nowhere — they consume no expert
+    capacity (so they cannot displace real tokens) and contribute nothing to
+    ``counts`` (so pad tokens never reach the EAM or the offload engine).
     """
     if cfg.moe_dispatch == "grouped" and x.shape[0] > 1:
         return moe_ffn_grouped(p, cfg, x, capacity_factor=capacity_factor,
-                               expert_fn=expert_fn)
+                               expert_fn=expert_fn, token_mask=token_mask)
     m = cfg.moe
     B, S, d = x.shape
     T = B * S
@@ -96,13 +114,21 @@ def moe_ffn(p, cfg: ArchConfig, x, *, capacity_factor: float | None = None,
     E, k = m.n_experts, m.top_k
 
     flat_e = idx.reshape(T * k)
+    C_drop = C
+    if token_mask is not None:
+        # pad tokens route to sentinel expert E: they sort past every real
+        # segment, so they never occupy a capacity slot ahead of real tokens
+        flat_e = jnp.where(jnp.repeat(token_mask.reshape(T), k), flat_e, E)
+        # drop exactly as an exact-length prefill would: capacity over the
+        # *real* token count (traced; <= the static shape bound C)
+        C_drop = _traced_capacity(token_mask.sum(), m, capacity_factor)
     order = jnp.argsort(flat_e, stable=True)
     sorted_e = flat_e[order]                                 # (T*k,)
     token_of = order // k
     seg_start = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
-    pos_in_e = jnp.arange(T * k) - seg_start[sorted_e]
-    keep = pos_in_e < C
-    slot = sorted_e * C + jnp.minimum(pos_in_e, C - 1)       # (T*k,)
+    pos_in_e = jnp.arange(T * k) - seg_start[jnp.minimum(sorted_e, E - 1)]
+    keep = (pos_in_e < C_drop) & (sorted_e < E)
+    slot = jnp.minimum(sorted_e, E - 1) * C + jnp.minimum(pos_in_e, C - 1)
 
     # token index feeding each (E*C) slot; T = "no token" sentinel.
     # Dropped (over-capacity) entries scatter to index E*C, discarded by
@@ -132,6 +158,9 @@ def moe_ffn(p, cfg: ArchConfig, x, *, capacity_factor: float | None = None,
 
     # --- aux: per-sequence expert counts (EAM row) + load-balance loss
     one_hot = jax.nn.one_hot(idx.reshape(B, S * k), E, dtype=jnp.int32)
+    if token_mask is not None:
+        one_hot = one_hot * jnp.repeat(token_mask.astype(jnp.int32), k,
+                                       axis=1)[..., None]
     counts = one_hot.sum(axis=1)                             # (B, E)
     frac_tokens = counts.sum(axis=0).astype(jnp.float32) / (T * k)
     frac_probs = probs.mean(axis=0)
@@ -140,7 +169,8 @@ def moe_ffn(p, cfg: ArchConfig, x, *, capacity_factor: float | None = None,
 
 
 def moe_ffn_grouped(p, cfg: ArchConfig, x, *,
-                    capacity_factor: float | None = None, expert_fn=None):
+                    capacity_factor: float | None = None, expert_fn=None,
+                    token_mask=None):
     """Per-sequence-group dispatch (GShard grouping, G = batch).
 
     The group dim stays sharded on the batch/data mesh axes end-to-end, so
@@ -161,15 +191,22 @@ def moe_ffn_grouped(p, cfg: ArchConfig, x, *,
     C = capacity(S, m, capacity_factor)
 
     flat_e = idx.reshape(B, S * k)
+    C_drop = C
+    if token_mask is not None:
+        # sentinel expert E: pads sort last, take no capacity; drops use the
+        # per-row real token count's capacity (see moe_ffn)
+        flat_e = jnp.where(jnp.repeat(token_mask, k, axis=1), flat_e, E)
+        C_drop = _traced_capacity(token_mask.sum(axis=1), m,
+                                  capacity_factor)[:, None]
     order = jnp.argsort(flat_e, axis=-1, stable=True)           # (B, S·k)
     sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
     token_of = order // k                                        # (B, S·k)
     seg_start = jax.vmap(
         lambda se: jnp.searchsorted(se, jnp.arange(E), side="left"))(sorted_e)
     pos_in_e = jnp.arange(S * k) - jnp.take_along_axis(
-        seg_start, sorted_e, axis=-1)
-    keep = pos_in_e < C
-    slot = sorted_e * C + jnp.minimum(pos_in_e, C - 1)
+        seg_start, jnp.minimum(sorted_e, E - 1), axis=-1)
+    keep = (pos_in_e < C_drop) & (sorted_e < E)
+    slot = jnp.minimum(sorted_e, E - 1) * C + jnp.minimum(pos_in_e, C - 1)
     slot_idx = jnp.where(keep, slot, E * C)                     # OOB = drop
 
     def scatter_tokens(slot_idx_b, token_of_b):
@@ -208,6 +245,9 @@ def moe_ffn_grouped(p, cfg: ArchConfig, x, *,
         y = y + apply_ffn(p["shared"], x, cfg.act)
 
     one_hot = jax.nn.one_hot(idx.reshape(B, S * k), E, dtype=jnp.int32)
+    if token_mask is not None:
+        one_hot = one_hot * jnp.repeat(token_mask.astype(jnp.int32), k,
+                                       axis=1)[..., None]
     counts = one_hot.sum(axis=1)
     frac_tokens = counts.sum(axis=0).astype(jnp.float32) / (B * S * k)
     frac_probs = probs.mean(axis=0)

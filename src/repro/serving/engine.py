@@ -131,6 +131,8 @@ class StepEngine:
         self._costs = {i: layer_cost(arch, i, cfg.bytes_per_param)
                        for i in range(arch.n_layers)}
         self._running: List[Request] = []
+        self._expected_keys = None        # stall-admission prior (cached)
+        self._expected_keys_n = -1
         self.request_eams: Dict[int, np.ndarray] = {}
         self.token_latencies: List[float] = []
         self.iter_log: List[dict] = []
@@ -245,6 +247,71 @@ class StepEngine:
                               "n_prefill": n_prefill, "n_decode": n_decode,
                               "batch": len(reqs), "lat": lat})
 
+    # -- batch run (offline replay drivers) -----------------------------------
+    def _scheduler_cfg(self) -> SchedulerConfig:
+        """Scheduler config for engine-built schedulers (model mode clamps
+        ``max_batch`` to the slot-pool capacity)."""
+        return self.cfg.scheduler
+
+    def _stall_budget(self) -> int:
+        scfg = self.cfg.scheduler
+        return scfg.stall_budget or max(1, self.cfg.gpu_cache_experts // 5)
+
+    def run(self, requests: List[Request], *,
+            max_iters: Optional[int] = None,
+            scheduling: Optional[str] = None) -> List[Request]:
+        """Replay a fixed request list to completion (offline driver shared
+        by trace mode and model mode; online front-ends use the model-mode
+        ``submit()/step()/drain()`` loop instead)."""
+        sched = make_scheduler(scheduling or self.cfg.scheduling,
+                               self._scheduler_cfg(), requests,
+                               cold_cost_fn=self._predicted_cold_cost,
+                               stall_budget=self._stall_budget())
+        if max_iters is None:
+            # every iteration with live requests generates one token per
+            # running request, so the workload bounds its own iteration
+            # count; anything beyond this is a scheduler bug, not load
+            max_iters = sum(r.max_new_tokens for r in requests) \
+                + len(requests) + 16
+        self.run_loop(sched, max_iters=max_iters)
+        return requests
+
+    # -- stall-aware admission (scheduler ``policy="stall"``) ------------------
+    def _predicted_cold_cost(self, r: Request) -> int:
+        """Predicted cold-expert union a joining request adds: the EAMC
+        prior's expected expert set minus the experts currently GPU-resident.
+        At admission time the request has no observed EAM yet, so the
+        prediction is the collection-wide prior (per layer, the experts
+        covering 80% of aggregate activation mass across EAMC entries) —
+        the same database Algorithm 1 predicts from, one step earlier."""
+        keys = self._expected_expert_keys()
+        gpu = self.offload.gpu_cache
+        return sum(1 for k in keys if k not in gpu)
+
+    def _expected_expert_keys(self):
+        entries = self.offload.eamc.entries
+        if self._expected_keys is not None \
+                and self._expected_keys_n == len(entries):
+            return self._expected_keys
+        keys: List[tuple] = []
+        if entries:
+            agg = np.zeros_like(np.asarray(entries[0], np.float64))
+            for e in entries:
+                e = np.asarray(e, np.float64)
+                agg += e / max(e.sum(), 1.0)
+            for li in range(agg.shape[0]):
+                row = agg[li]
+                tot = row.sum()
+                if tot <= 0:
+                    continue
+                order = np.argsort(row)[::-1]
+                cum = np.cumsum(row[order]) / tot
+                take = int(np.searchsorted(cum, 0.8)) + 1
+                keys.extend((li, int(e)) for e in order[:take])
+        self._expected_keys = keys
+        self._expected_keys_n = len(entries)
+        return keys
+
     # -- metrics ---------------------------------------------------------------
     def stats(self) -> dict:
         s = self.offload.stats()
@@ -298,83 +365,261 @@ class ServingEngine(StepEngine):
         super()._retire(r)
         self._req_rngs.pop(r.rid, None)
 
-    # -- main loop ---------------------------------------------------------------
-    def run(self, requests: List[Request], *,
-            max_iters: Optional[int] = None,
-            scheduling: Optional[str] = None) -> List[Request]:
-        sched = make_scheduler(scheduling or self.cfg.scheduling,
-                               self.cfg.scheduler, requests)
-        if max_iters is None:
-            # every iteration with live requests generates one token per
-            # running request, so the workload bounds its own iteration
-            # count; anything beyond this is a scheduler bug, not load
-            max_iters = sum(r.max_new_tokens for r in requests) \
-                + len(requests) + 16
-        self.run_loop(sched, max_iters=max_iters)
-        return requests
-
 
 # ---------------------------------------------------------------------------
-# Real-model serving (model mode)
+# Real-model serving (model mode): persistent slot-pool decode engine
 # ---------------------------------------------------------------------------
+
+
+def _pow2_bucket(n: int, lo: int = 8) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
 
 
 class JaxModelServer(StepEngine):
-    """Batched generative serving of a real JAX model over the same step
-    loop as trace mode. Router decisions are the model's actual top-k
-    choices; latency accounting (compute + expert stalls) uses the same
-    virtual clock.
+    """Persistent slot-pool serving of a real JAX model over the same step
+    loop, admission policy and retirement lifecycle as trace mode. Router
+    decisions are the model's actual top-k choices; latency accounting
+    (compute + expert stalls) uses the same virtual clock.
 
-    Prompts in one ``generate`` call share a length and a token budget (the
-    jitted prefill/decode kernels run the batch in lockstep); sampling is
-    greedy.
+    The pool holds ``n_slots`` fixed batch slots driving **one** jitted
+    decode step over the whole pool — fixed shapes, so after warmup no
+    recompilation ever happens, regardless of request churn. The decode
+    cache is slot-indexed (per-slot position vector, per-slot attention
+    masks, ``active`` gating so frozen slots never advance KV/ring/
+    recurrent state); a joining request's ragged prompt is right-padded to
+    a power-of-two bucket, prefilled as a B=1 call, and written into a free
+    slot (``Model.write_slot``), so requests with differing prompt lengths
+    and token budgets join at any token boundary and their slots recycle on
+    completion. rid→slot is the only model-mode-specific state.
+
+    Request-loop API: ``submit(request)`` enqueues (arrival timestamps are
+    virtual-clock seconds), ``step()`` runs one iteration, ``drain()`` runs
+    to completion. ``generate()`` remains as a lockstep-compat wrapper.
+    Sampling is greedy (argmax inside the jitted step).
+
+    ``compile_counts`` tracks jit traces per entry point ("decode_step" and
+    ("prefill", bucket)) by counting trace-time side effects — the
+    zero-recompile-after-warmup acceptance check reads it directly.
+
+    Invariance note: a request's tokens/EAM are bit-identical whether it
+    runs alone or joins a live pool because every per-row computation in
+    the decode step (attention row, dropless-capacity MoE dispatch, norms)
+    is independent of the other rows' content. This needs the default
+    dropless decode capacity (``decode_capacity_factor`` unset); a lossy
+    capacity lets one slot's tokens displace another's.
+
+    Padded-prefill caveat: pad tokens are exact for attention-family models
+    (causally invisible, no MoE capacity, no counts); recurrent prefill
+    state (mamba/rwkv conv/ssm scans) is not pad-corrected, so models with
+    recurrent layers prefill at exact prompt lengths instead (one compile
+    per distinct length — bounded in practice by workload length buckets).
     """
 
     def __init__(self, cfg: EngineConfig, model, params, *,
-                 eamc: Optional[EAMC] = None, seed: int = 0):
-        import jax
-
+                 eamc: Optional[EAMC] = None, seed: int = 0,
+                 n_slots: Optional[int] = None,
+                 cache_len: Optional[int] = None,
+                 prefill_buckets=None):
         super().__init__(cfg, eamc=eamc)
         self.model = model
         self.params = params
-        self._prefill = jax.jit(
-            lambda p, b, c: model.prefill(p, b, c))
-        self._step = jax.jit(
-            lambda p, c, t: model.serve_step(p, c, t))
-        self._gen: Optional[dict] = None
+        self.n_slots = n_slots or cfg.scheduler.max_batch
+        self.cache_len = cache_len
+        # pad buckets only help when padded prefill is exact (attention-only
+        # stacks); recurrent layers prefill at exact lengths
+        self._pad = (all(d.kind == "attn" for d in model.descs)
+                     if prefill_buckets is None else bool(prefill_buckets))
+        self._buckets = tuple(sorted(prefill_buckets)) if prefill_buckets \
+            else ()
+        self.compile_counts: Dict = {}
+        self.generated: Dict[int, list] = {}   # rid -> token list (pop it)
+        self._cache = None                     # the slot-pool decode cache
+        self._tok: Optional[np.ndarray] = None
+        self._free: List[int] = []
+        self._slot_of: Dict[int, int] = {}
+        self._prefill_fns: Dict[int, object] = {}
+        self._step_fn = None
+        self._rid_counter = 0
+        self._outstanding_iters = 0
+        self._sched = ContinuousScheduler(
+            self._scheduler_cfg(),
+            cold_cost_fn=self._predicted_cold_cost,
+            stall_budget=self._stall_budget())
 
+    # -- pool management -------------------------------------------------------
+    def _scheduler_cfg(self) -> SchedulerConfig:
+        from dataclasses import replace
+        scfg = self.cfg.scheduler
+        if scfg.max_batch > self.n_slots:
+            scfg = replace(scfg, max_batch=self.n_slots)
+        return scfg
+
+    def _ensure_pool(self, need_len: int) -> None:
+        if self._cache is not None and need_len <= self.cache_len:
+            return
+        if self._slot_of:
+            raise RuntimeError(
+                f"request needs cache_len {need_len} > pool {self.cache_len} "
+                "while requests are running; construct JaxModelServer with "
+                "cache_len sized for the workload")
+        if self._cache is not None or self.cache_len is None \
+                or need_len > self.cache_len:
+            self.cache_len = _pow2_bucket(max(need_len, self.cache_len or 0),
+                                          lo=32)
+        self._cache = self.model.init_cache(self.n_slots, self.cache_len)
+        self._tok = np.zeros(self.n_slots, np.int32)
+        self._free = list(range(self.n_slots))
+        # cache shapes changed: new jit cache entries will trace
+        self._prefill_fns.clear()
+        self._step_fn = None
+
+    def _bucket(self, S: int) -> int:
+        if self._buckets:
+            for b in self._buckets:
+                if b >= S:
+                    return b
+            return S
+        if not self._pad:
+            return S
+        return min(_pow2_bucket(S), self.cache_len)
+
+    def _count(self, key) -> None:
+        self.compile_counts[key] = self.compile_counts.get(key, 0) + 1
+
+    def _get_step_fn(self):
+        if self._step_fn is None:
+            import jax
+            import jax.numpy as jnp
+            model = self.model
+
+            def _impl(params, cache, tok, active):
+                self._count("decode_step")   # runs at trace time only
+                logits, cache, aux = model.serve_step(params, cache, tok,
+                                                      active=active)
+                return jnp.argmax(logits, axis=-1), cache, aux["counts"]
+
+            # the pool cache is rebound to the output every call — donate it
+            # so XLA updates it in place instead of copying the whole
+            # n_slots x cache_len KV/recurrent state per generated token
+            self._step_fn = jax.jit(_impl, donate_argnums=(1,))
+        return self._step_fn
+
+    def _get_prefill_fn(self, P: int):
+        fn = self._prefill_fns.get(P)
+        if fn is None:
+            import jax
+            import jax.numpy as jnp
+            model, cache_len = self.model, self.cache_len
+
+            def _impl(params, pool, toks, true_len, slot):
+                self._count(("prefill", P))
+                one = model.init_cache(1, cache_len)
+                logits, one, aux = model.prefill(params, {"tokens": toks},
+                                                 one, true_len=true_len)
+                pool = model.write_slot(pool, one, slot)
+                return jnp.argmax(logits[0], -1), pool, aux["counts"][:, 0, :]
+
+            fn = self._prefill_fns[P] = jax.jit(_impl, donate_argnums=(1,))
+        return fn
+
+    # -- routing: prefill joiners into free slots, one pool decode step --------
     def _route_iteration(self, reqs: List[Request], tokens: List[int]
                          ) -> np.ndarray:
         import jax.numpy as jnp
 
-        g = self._gen
-        if g["cache"] is None:                       # prefill iteration
-            prompts = jnp.asarray(np.stack([r.prompt for r in reqs]))
-            cache = self.model.init_cache(len(reqs), g["cache_len"])
-            logits, cache, aux = self._prefill(self.params,
-                                               {"tokens": prompts}, cache)
-        else:                                        # lockstep decode
-            logits, cache, aux = self._step(self.params, g["cache"], g["tok"])
-        g["cache"] = cache
-        g["tok"] = jnp.argmax(logits, axis=-1)
-        g["out"].append(np.asarray(g["tok"]))
-        return np.asarray(aux["counts"])
+        cols: Dict[int, np.ndarray] = {}
+        for r in reqs:
+            if r.state != PREFILL:
+                continue
+            if not self._free:
+                raise RuntimeError("scheduler admitted beyond slot capacity")
+            self._free.sort()
+            slot = self._free.pop(0)
+            self._slot_of[r.rid] = slot
+            r.slot = slot
+            S = r.prompt_len
+            P = self._bucket(S)
+            padded = np.zeros(P, np.int32)
+            padded[:S] = np.asarray(r.prompt, np.int32)
+            tok0, self._cache, cnts = self._get_prefill_fn(P)(
+                self.params, self._cache, jnp.asarray(padded[None]),
+                jnp.asarray([S], jnp.int32), jnp.asarray(slot, jnp.int32))
+            self._tok[slot] = int(tok0)
+            self.generated[r.rid] = [int(tok0)]
+            cols[r.rid] = np.asarray(cnts)
 
+        deciders = [r for r in reqs if r.state == DECODE]
+        if deciders:
+            active = np.zeros(self.n_slots, bool)
+            for r in deciders:
+                active[self._slot_of[r.rid]] = True
+            tok_new, self._cache, cnts = self._get_step_fn()(
+                self.params, self._cache, jnp.asarray(self._tok),
+                jnp.asarray(active))
+            tok_new, cnts = np.asarray(tok_new), np.asarray(cnts)
+            for r in deciders:
+                s = self._slot_of[r.rid]
+                self._tok[s] = tok_new[s]
+                self.generated[r.rid].append(int(tok_new[s]))
+                cols[r.rid] = cnts[:, s, :]
+        return np.stack([cols[r.rid] for r in reqs], axis=1)
+
+    def _retire(self, r: Request) -> None:
+        super()._retire(r)
+        slot = self._slot_of.pop(r.rid, None)
+        if slot is not None:
+            self._free.append(slot)
+        r.slot = -1
+
+    # -- request-loop API ------------------------------------------------------
+    def submit(self, request: Request) -> None:
+        """Enqueue a request (``arrival`` in virtual-clock seconds). It is
+        admitted by the continuous scheduler at the first token boundary
+        where its arrival has passed and a slot is free."""
+        self._ensure_pool(request.prompt_len + request.max_new_tokens)
+        self._sched.add(request)
+        self._outstanding_iters += request.max_new_tokens + 2
+
+    def step(self, scheduler=None) -> bool:
+        """One engine iteration against the server's own scheduler (or an
+        explicit one, for the shared offline ``run`` driver)."""
+        return super().step(self._sched if scheduler is None else scheduler)
+
+    def drain(self, *, max_iters: Optional[int] = None) -> None:
+        """Run until every submitted request has completed."""
+        if max_iters is None:
+            max_iters = self._outstanding_iters + 16
+        self.run_loop(self._sched, max_iters=max_iters)
+        self._outstanding_iters = 0
+
+    def run(self, requests: List[Request], **kw) -> List[Request]:
+        for r in requests:
+            self._ensure_pool(r.prompt_len + r.max_new_tokens)
+        return super().run(requests, **kw)
+
+    # -- lockstep-compat wrapper ----------------------------------------------
     def generate(self, prompts: np.ndarray, max_new_tokens: int):
-        """prompts: (B, S) int32. Returns (generated (B, max_new), stats)."""
+        """prompts: (B, S) int32. Returns (generated (B, max_new), stats).
+
+        Compatibility wrapper over the request loop: submits B requests
+        arriving "now" and drains. With B <= n_slots they run concurrently;
+        beyond that they queue for slots — either way each request decodes
+        at its own pace through the slot pool."""
         B, S = prompts.shape
-        reqs = [Request(rid=b, arrival=0.0,
+        now = float(self.offload.sim.clock)
+        reqs = [Request(rid=self._rid_counter + b, arrival=now,
                         prompt=np.asarray(prompts[b]),
                         max_new_tokens=max_new_tokens) for b in range(B)]
-        self._gen = {"cache": None, "tok": None, "out": [],
-                     "cache_len": S + max_new_tokens}
-        # all prompts are present at t=0: the continuous scheduler admits
-        # the whole call as one prefill iteration, then decodes in lockstep
-        sched = ContinuousScheduler(SchedulerConfig(max_batch=B), reqs)
-        self.run_loop(sched, max_iters=S + max_new_tokens + 2)
-        eams = [self.request_eams.pop(b, None) for b in range(B)]
-        out = np.stack(self._gen["out"], axis=1)
-        self._gen = None
+        self._rid_counter += B
+        for r in reqs:
+            self.submit(r)
+        self.drain()
+        out = np.stack([np.asarray(self.generated.pop(r.rid), np.int64)
+                        for r in reqs])
+        eams = [self.request_eams.pop(r.rid, None) for r in reqs]
         stats = dict(self.offload.stats(),
                      mean_token_latency=float(np.mean(self.token_latencies)))
         return out, {"eams": eams, **stats}

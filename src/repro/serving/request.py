@@ -5,7 +5,10 @@ A request's lifecycle under iteration-level scheduling is
 scheduler admits it at a token boundary, runs its prefill inside that
 iteration (mixed with other requests' decode), then decodes one token per
 iteration until ``max_new_tokens``. All engine-side state is keyed by
-``rid`` — request identity, not batch slot.
+``rid`` — request identity, not batch slot. Model mode additionally maps a
+running request onto a fixed-shape batch slot (``slot``); the rid→slot
+binding lives only while the request is in the running set and is the one
+piece of model-mode-specific state (DESIGN.md §1).
 """
 from __future__ import annotations
 
@@ -30,6 +33,7 @@ class Request:
     t_first: float = 0.0           # first-token time
     t_done: float = 0.0
     n_generated: int = 0
+    slot: int = -1                 # model mode: batch slot while running
 
     @property
     def prompt_len(self) -> int:

@@ -36,8 +36,19 @@ class SchedulerConfig:
     # continuous mode: "prefill" admits every arrived request that fits
     # (prefill-priority, minimizes TTFT); "decode" admits at most one new
     # request per iteration so an arrival burst cannot blow up a decode
-    # iteration (decode-priority, minimizes decode jitter)
+    # iteration (decode-priority, minimizes decode jitter); "stall" defers
+    # a prefill while its predicted cold-expert union against the current
+    # GPU cache exceeds ``stall_budget`` (stall-aware admission — the
+    # DESIGN.md §1 open item: in expert-transfer-bound regimes a churning
+    # running set unions more cold experts per iteration, inflating every
+    # request's service time)
     policy: str = "prefill"
+    stall_budget: int = 0       # "stall": budget on (predicted cold experts
+    #                             x running-set size) a joining prefill may
+    #                             impose (0 = auto: the engine uses
+    #                             gpu_cache_experts // 5)
+    stall_max_wait: float = 0.75  # "stall" aging: admit anyway after this
+    #                               long in the queue (starvation bound)
 
 
 class Scheduler:
@@ -82,13 +93,28 @@ class Scheduler:
 
 class ContinuousScheduler:
     """Iteration-level scheduler: running set + waiting queue, join at any
-    token boundary, leave on completion."""
+    token boundary, leave on completion.
 
-    def __init__(self, cfg: SchedulerConfig, requests: List[Request] = ()):
+    ``cold_cost_fn`` (``policy="stall"``): callable ``(request) -> int``
+    returning the predicted number of cold experts — experts the joining
+    request is expected to activate that are not GPU-resident right now —
+    supplied by the engine (EAMC prior vs. live cache contents). A prefill
+    whose predicted cold union, weighted by the running-set size it would
+    stall, exceeds ``stall_budget`` waits at the head of the queue:
+    admitting it would force every running request to stall behind its
+    expert transfers. Admission order stays FIFO; an empty running set or
+    ``stall_max_wait`` aging always unblocks the head."""
+
+    def __init__(self, cfg: SchedulerConfig, requests: List[Request] = (), *,
+                 cold_cost_fn=None, stall_budget: Optional[int] = None):
         self.cfg = cfg
         self.waiting: List[Request] = sorted(requests,
                                              key=lambda r: r.arrival)
         self.n_running = 0
+        self.cold_cost_fn = cold_cost_fn
+        self.stall_budget = (cfg.stall_budget if stall_budget is None
+                             else stall_budget)
+        self.deferrals = 0          # stall policy: admission decisions vetoed
 
     def add(self, request: Request) -> None:
         """Dynamic arrival (online serving front-ends)."""
@@ -98,8 +124,21 @@ class ContinuousScheduler:
         return not self.waiting and self.n_running == 0
 
     def next_event(self, now: float) -> Optional[float]:
-        """Earliest time at which a waiting request can be admitted."""
+        """Earliest time at which a waiting request can be admitted. The
+        head's arrival is always it: the stall gate only defers joins onto
+        a *live* running set, and an idle engine admits unconditionally, so
+        an engine consulting this while idle never spins on a deferred
+        head."""
         return self.waiting[0].arrival if self.waiting else None
+
+    def _defer(self, head: Request, now: float) -> bool:
+        if self.cfg.policy != "stall" or self.cold_cost_fn is None:
+            return False
+        if now - head.arrival >= self.cfg.stall_max_wait - _EPS:
+            return False                     # aging: bounded deferral
+        # the joiner's cold-expert transfers stall every running request's
+        # iterations, so the marginal cost scales with the running-set size
+        return self.cold_cost_fn(head) * self.n_running > self.stall_budget
 
     def admit(self, now: float) -> List[Request]:
         free = self.cfg.max_batch - self.n_running
@@ -107,9 +146,20 @@ class ContinuousScheduler:
             return []
         if self.cfg.policy == "decode":
             free = min(free, 1)
+        # Stall-aware admission: an idle engine admits the whole arrived
+        # burst unconditionally (the cohort pays its cold working-set
+        # transfer once, amortized across members — the property that makes
+        # batch-to-completion win transfer-bound regimes), while joining a
+        # *live* running set is gated on the predicted cold-expert union
+        # weighted by how many running requests the joiner's transfers
+        # would stall.
+        gate = self.n_running > 0
         admitted: List[Request] = []
         while (self.waiting and len(admitted) < free
                and self.waiting[0].arrival <= now + _EPS):
+            if gate and self._defer(self.waiting[0], now):
+                self.deferrals += 1
+                break
             admitted.append(self.waiting.pop(0))
         self.n_running += len(admitted)
         return admitted
@@ -158,9 +208,11 @@ class StaticBatchScheduler:
 
 
 def make_scheduler(scheduling: str, cfg: SchedulerConfig,
-                   requests: List[Request]):
+                   requests: List[Request], *, cold_cost_fn=None,
+                   stall_budget: Optional[int] = None):
     if scheduling == "continuous":
-        return ContinuousScheduler(cfg, requests)
+        return ContinuousScheduler(cfg, requests, cold_cost_fn=cold_cost_fn,
+                                   stall_budget=stall_budget)
     if scheduling == "static":
         return StaticBatchScheduler(cfg, requests)
     raise ValueError(f"unknown scheduling mode: {scheduling!r}")

@@ -51,6 +51,26 @@ def test_flash_decode_kernel(B, H, Hkv, hd, S, dtype):
                                    **_tol(dtype))
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_kernel_per_slot_lengths(dtype):
+    """Slot-pool decode: each batch row masks its own valid prefix, and a
+    row's output is independent of the other rows' lengths."""
+    B, H, Hkv, hd, S = 4, 8, 2, 64, 256
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, H, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd)).astype(dtype)
+    lens = jnp.asarray([S, 7, 129, 1], jnp.int32)
+    y = flash_decode(q, k, v, lens, block_s=128, interpret=True)
+    y_ref = ref.flash_decode_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), **_tol(dtype))
+    # row b under ragged lengths == row b under its batch-shared length
+    for b, L in enumerate([S, 7, 129, 1]):
+        y_solo = flash_decode(q, k, v, L, block_s=128, interpret=True)
+        np.testing.assert_array_equal(np.asarray(y[b]), np.asarray(y_solo[b]))
+
+
 @pytest.mark.parametrize("BH,T,hd,chunk", [(2, 64, 64, 32), (4, 32, 32, 32),
                                            (1, 128, 64, 64)])
 def test_wkv6_kernel(BH, T, hd, chunk):

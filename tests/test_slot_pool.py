@@ -1,0 +1,194 @@
+"""Model-mode slot-pool continuous batching (the persistent fixed-shape
+decode engine): batch invariance, slot recycling with zero recompiles, and
+stall-aware admission."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serving import EngineConfig, SchedulerConfig
+from repro.serving.engine import JaxModelServer
+from repro.serving.request import Request
+from repro.serving.scheduler import ContinuousScheduler
+
+jax = pytest.importorskip("jax")
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    from repro.models import Model
+    arch = get_config("qwen3-moe-235b-a22b").reduced()
+    model = Model(arch)
+    params = model.init(jax.random.PRNGKey(0))
+    return arch, model, params
+
+
+def _server(model_and_params, *, n_slots=4, cache_len=64, policy="prefill"):
+    arch, model, params = model_and_params
+    cfg = EngineConfig(arch=arch, gpu_cache_experts=4, dram_cache_experts=8,
+                       scheduler=SchedulerConfig(max_batch=n_slots,
+                                                 policy=policy))
+    return JaxModelServer(cfg, model, params, n_slots=n_slots,
+                          cache_len=cache_len)
+
+
+def _req(arch, rid, arrival, plen, olen, seed=None):
+    rng = np.random.default_rng(1000 + (seed if seed is not None else rid))
+    return Request(rid=rid, arrival=float(arrival),
+                   prompt=rng.integers(0, arch.vocab, plen).astype(np.int32),
+                   max_new_tokens=olen)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: batch invariance — tokens bit-identical alone vs mid-join
+# ---------------------------------------------------------------------------
+
+def test_tokens_bit_identical_alone_vs_join_mid_decode(model_and_params):
+    """A request's generated tokens are bit-identical whether it runs alone
+    in the pool or joins a live slot pool mid-decode, with differing prompt
+    lengths and token budgets across the pool (ISSUE 2 acceptance)."""
+    arch, _, _ = model_and_params
+
+    solo = _server(model_and_params)
+    r_solo = _req(arch, 0, 0.0, plen=5, olen=10, seed=7)
+    solo.submit(r_solo)
+    solo.drain()
+    solo_toks = solo.generated.pop(0)
+    solo_eam = solo.request_eams.pop(0)
+    assert len(solo_toks) == 10
+
+    joint = _server(model_and_params)
+    long_req = _req(arch, 0, 0.0, plen=8, olen=24, seed=3)
+    joiner = _req(arch, 1, 1e-9, plen=5, olen=10, seed=7)  # same prompt
+    joint.submit(long_req)
+    joint.submit(joiner)
+    joint.drain()
+    # the joiner really joined mid-flight: admitted before the long request
+    # finished, into a pool already decoding
+    assert joiner.t_sched < long_req.t_done
+    assert joiner.t_sched > 0.0
+    assert long_req.n_generated == 24 and joiner.n_generated == 10
+
+    assert joint.generated.pop(1) == solo_toks            # bit-identical
+    assert np.array_equal(joint.request_eams.pop(1), solo_eam)
+
+
+def test_ragged_prompts_and_budgets_through_scheduler(model_and_params):
+    """Requests with four different prompt lengths and budgets run
+    concurrently through the continuous scheduler and all complete."""
+    arch, _, _ = model_and_params
+    srv = _server(model_and_params)
+    reqs = [_req(arch, i, 0.001 * i, plen=p, olen=o)
+            for i, (p, o) in enumerate([(4, 3), (7, 9), (12, 5), (5, 12)])]
+    for r in reqs:
+        srv.submit(r)
+    srv.drain()
+    for r in reqs:
+        assert r.n_generated == r.max_new_tokens
+        assert len(srv.generated.pop(r.rid)) == r.max_new_tokens
+        assert r.slot == -1                     # slot released on retire
+    assert sorted(srv._free) == list(range(srv.n_slots))
+    assert not srv._slot_of
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: slot recycle, zero recompiles after warmup
+# ---------------------------------------------------------------------------
+
+def test_zero_recompiles_across_admission_waves(model_and_params):
+    """>=3 waves of admissions through recycled slots trigger no jit traces
+    after the warmup wave (fixed-shape decode step + bucketed prefill)."""
+    arch, _, _ = model_and_params
+    srv = _server(model_and_params, n_slots=3, cache_len=64)
+
+    def wave(base_rid, lens):
+        for i, (p, o) in enumerate(lens):
+            srv.submit(_req(arch, base_rid + i, 0.0005 * i, plen=p, olen=o))
+        srv.drain()
+        for i in range(len(lens)):
+            srv.generated.pop(base_rid + i)
+
+    # warmup: exercises prefill buckets 8 and 16 + the decode step
+    wave(0, [(5, 4), (8, 6), (12, 5)])
+    warm = dict(srv.compile_counts)
+    assert warm.get("decode_step") == 1
+    assert warm.get(("prefill", 8)) == 1 and warm.get(("prefill", 16)) == 1
+
+    # three more waves of churn through the same (recycled) slots
+    wave(10, [(6, 3), (11, 7), (7, 4)])
+    wave(20, [(4, 5), (16, 4), (8, 8)])
+    wave(30, [(9, 2), (5, 6), (13, 3)])
+    assert srv.compile_counts == warm          # zero recompiles after warmup
+    assert sorted(srv._free) == list(range(3))  # every slot recycled
+
+
+def test_generate_compat_wrapper(model_and_params):
+    """The lockstep-compat ``generate`` API still returns (B, max_new)
+    tokens + per-request EAMs over the slot pool."""
+    arch, _, _ = model_and_params
+    srv = _server(model_and_params)
+    rng = np.random.default_rng(5)
+    prompts = rng.integers(0, arch.vocab, (2, 8)).astype(np.int32)
+    out, stats = srv.generate(prompts, max_new_tokens=4)
+    assert out.shape == (2, 4)
+    assert len(stats["eams"]) == 2
+    n_moe = len(model_and_params[1].moe_layers)
+    for eam in stats["eams"]:
+        assert eam.shape == (n_moe, arch.moe.n_experts)
+        assert eam.sum() == (8 + 4 - 1) * arch.moe.top_k * n_moe
+    # a second call reuses the pool: no new compiles
+    warm = dict(srv.compile_counts)
+    out2, _ = srv.generate(prompts, max_new_tokens=4)
+    assert out2.shape == (2, 4)
+    assert srv.compile_counts == warm
+
+
+# ---------------------------------------------------------------------------
+# Stall-aware admission (scheduler-level unit behaviour)
+# ---------------------------------------------------------------------------
+
+def _sreq(rid, arrival):
+    return Request(rid=rid, arrival=float(arrival),
+                   prompt=np.zeros(4, np.int32), max_new_tokens=4)
+
+
+def test_stall_policy_defers_cold_joiner_until_aged():
+    cold = {"n": 100}
+    sched = ContinuousScheduler(
+        SchedulerConfig(max_batch=8, policy="stall", stall_max_wait=1.0),
+        [_sreq(0, 0.0), _sreq(1, 0.1)],
+        cold_cost_fn=lambda r: cold["n"], stall_budget=10)
+    # idle engine: the whole arrived burst is admitted unconditionally
+    assert [r.rid for r in sched.admit(0.0)] == [0]
+    # live running set: a cold joiner is deferred...
+    assert sched.admit(0.2) == []
+    assert sched.deferrals == 1
+    # ...until its predicted cold union fits the budget (cache warmed up)
+    cold["n"] = 5
+    assert [r.rid for r in sched.admit(0.3)] == [1]
+    sched.on_finish(0), sched.on_finish(1)
+    assert sched.done()
+
+
+def test_stall_policy_aging_bounds_deferral():
+    sched = ContinuousScheduler(
+        SchedulerConfig(max_batch=8, policy="stall", stall_max_wait=0.5),
+        [_sreq(0, 0.0), _sreq(1, 0.1)],
+        cold_cost_fn=lambda r: 1_000_000, stall_budget=1)
+    assert [r.rid for r in sched.admit(0.0)] == [0]
+    assert sched.admit(0.2) == []              # deferred: forever-cold
+    assert [r.rid for r in sched.admit(0.61)] == [1]   # aged past 0.5s
+
+
+def test_stall_policy_weights_cold_cost_by_running_set():
+    """The same cold cost is acceptable with 1 running request but deferred
+    with 3 (marginal stall cost scales with who it stalls)."""
+    cfg = SchedulerConfig(max_batch=8, policy="stall", stall_max_wait=99.0)
+    a = ContinuousScheduler(cfg, [_sreq(0, 0.0), _sreq(1, 0.1)],
+                            cold_cost_fn=lambda r: 4, stall_budget=5)
+    a.admit(0.0)
+    assert len(a.admit(0.2)) == 1              # 4 * 1 running <= 5
+    b = ContinuousScheduler(cfg, [_sreq(i, 0.0) for i in range(3)]
+                            + [_sreq(3, 0.1)],
+                            cold_cost_fn=lambda r: 4, stall_budget=5)
+    b.admit(0.0)
+    assert b.admit(0.2) == []                  # 4 * 3 running > 5
