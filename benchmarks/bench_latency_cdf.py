@@ -14,15 +14,20 @@ import numpy as np
 from benchmarks.common import build_engine, emit, run_workload
 
 
-def main(quick=True, scheduling="continuous", policy="prefill"):
+def main(quick=True, scheduling="continuous", policy="prefill",
+         arch="switch-large-128", ssd_gbps=None, dram_cache=None):
     n = 30 if quick else 100
     modes = ["static", "continuous"] if scheduling == "both" else [scheduling]
+    # cache-only = the demand-fetch ablation (same activation-aware cache,
+    # no prefetch) — the SSD-tier prefetch-vs-demand comparison
     for load, rps in (("low", 0.5), ("high", 6.0)):
-        for system in ("moe-infinity", "pytorch-um"):
+        for system in ("moe-infinity", "cache-only", "pytorch-um"):
             for mode in modes:
-                eng = build_engine("switch-large-128", system,
-                                   scheduling=mode, policy=policy)
+                eng = build_engine(arch, system,
+                                   scheduling=mode, policy=policy,
+                                   ssd_gbps=ssd_gbps, dram_slots=dram_cache)
                 reqs = run_workload(eng, n_requests=n, rps=rps, seed=11)
+                stats = eng.stats()
                 lat = np.array(eng.token_latencies) * 1000
                 e2e = np.array([r.latency for r in reqs]) * 1000
                 tag = f"fig5/{load}/{system}" + \
@@ -32,6 +37,10 @@ def main(quick=True, scheduling="continuous", policy="prefill"):
                          round(float(np.percentile(lat, p)), 2), "ms/token")
                     emit(f"{tag}/e2e-p{p}",
                          round(float(np.percentile(e2e, p)), 2), "ms")
+                emit(f"{tag}/mean", round(float(lat.mean()), 2), "ms/token",
+                     f"ssd-demand={stats['demand_from_ssd']} "
+                     f"dram-demand={stats['demand_from_dram']} "
+                     f"staged={stats['staged_prefetches']}")
 
 
 if __name__ == "__main__":
@@ -41,8 +50,15 @@ if __name__ == "__main__":
                     choices=["static", "continuous", "both"])
     ap.add_argument("--policy", default="prefill",
                     choices=["prefill", "decode", "stall"])
+    ap.add_argument("--arch", default="switch-large-128")
+    ap.add_argument("--ssd-gbps", type=float, default=None,
+                    help="SSD→DRAM bandwidth GB/s ('inf' = no SSD tier)")
+    ap.add_argument("--dram-cache", type=int, default=None,
+                    help="host-DRAM cache slots; below the expert-set size "
+                         "this opens the experts ≫ host DRAM regime")
     args = ap.parse_args()
     if not args.full:
         print("# quick mode (30 requests); pass --full for the "
               "paper-scale Fig 5 CDFs")
-    main(quick=not args.full, scheduling=args.scheduling, policy=args.policy)
+    main(quick=not args.full, scheduling=args.scheduling, policy=args.policy,
+         arch=args.arch, ssd_gbps=args.ssd_gbps, dram_cache=args.dram_cache)

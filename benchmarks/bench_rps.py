@@ -27,7 +27,8 @@ MODELS = ["switch-base-128", "switch-base-256", "switch-large-128",
 SYSTEMS = ["moe-infinity", "pytorch-um", "zero-style"]
 
 
-def main(quick=True, scheduling="continuous", policy="prefill"):
+def main(quick=True, scheduling="continuous", policy="prefill",
+         ssd_gbps=None, dram_cache=None):
     rps_list = [0.5, 2.0] if quick else [0.5, 1.0, 2.0, 4.0, 8.0]
     models = MODELS[:2] if quick else MODELS
     n = 24 if quick else 80
@@ -39,9 +40,11 @@ def main(quick=True, scheduling="continuous", policy="prefill"):
             for rps in rps_list:
                 for mode in modes:
                     eng = build_engine(model, system, scheduling=mode,
-                                       policy=policy)
+                                       policy=policy, ssd_gbps=ssd_gbps,
+                                       dram_slots=dram_cache)
                     reqs = run_workload(eng, n_requests=n, rps=rps)
-                    lat = eng.stats()["mean_token_latency"]
+                    stats = eng.stats()
+                    lat = stats["mean_token_latency"]
                     results[(model, system, rps, mode)] = lat
                     e2e[(model, system, rps, mode)] = mean_e2e(reqs)
                     tag = f"fig4/{model}/{system}/rps={rps}" + \
@@ -50,6 +53,10 @@ def main(quick=True, scheduling="continuous", policy="prefill"):
                     emit(tag + "/e2e",
                          round(e2e[(model, system, rps, mode)] * 1000, 2),
                          "ms")
+                    emit(tag + "/ssd-demand", stats["demand_from_ssd"],
+                         "fetches",
+                         f"dram={stats['demand_from_dram']} "
+                         f"staged={stats['staged_prefetches']}")
     # paper claim: MoE-Infinity is fastest at every point
     for mode in modes:
         wins = sum(
@@ -76,8 +83,14 @@ if __name__ == "__main__":
     ap.add_argument("--policy", default="prefill",
                     choices=["prefill", "decode", "stall"],
                     help="continuous-mode admission policy")
+    ap.add_argument("--ssd-gbps", type=float, default=None,
+                    help="SSD→DRAM bandwidth GB/s ('inf' = no SSD tier)")
+    ap.add_argument("--dram-cache", type=int, default=None,
+                    help="host-DRAM cache slots (default: 2/3 of experts); "
+                         "smaller values push experts to the SSD tier")
     args = ap.parse_args()
     if not args.full:
         print("# quick mode (2 models x 2 rates); pass --full for the "
               "paper-scale Fig 4 sweep")
-    main(quick=not args.full, scheduling=args.scheduling, policy=args.policy)
+    main(quick=not args.full, scheduling=args.scheduling, policy=args.policy,
+         ssd_gbps=args.ssd_gbps, dram_cache=args.dram_cache)

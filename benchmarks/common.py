@@ -61,7 +61,8 @@ def build_engine(arch_id="switch-base-128", system="moe-infinity", *,
                  gpu_slots=None, dram_slots=None, eamc=None, oracle=None,
                  hw=None, max_batch=16, seed=0, topk_all=True,
                  scheduling="continuous", policy="prefill",
-                 keep_request_eams=False):
+                 keep_request_eams=False, ssd_gbps=None, ssd_iops=None,
+                 tier_aware=True):
     arch = get_config(arch_id)
     oracle = oracle or build_oracle(arch)
     eamc = eamc if eamc is not None else build_eamc(arch, oracle)
@@ -69,6 +70,13 @@ def build_engine(arch_id="switch-base-128", system="moe-infinity", *,
     total = E * L
     gpu_slots = gpu_slots if gpu_slots is not None else total // 5
     dram_slots = dram_slots if dram_slots is not None else (2 * total) // 3
+    hw = hw or HWConfig()
+    if ssd_gbps is not None or ssd_iops is not None:
+        from dataclasses import replace
+        hw = replace(hw,
+                     ssd_to_dram_gbps=(hw.ssd_to_dram_gbps if ssd_gbps
+                                       is None else ssd_gbps),
+                     ssd_iops=hw.ssd_iops if ssd_iops is None else ssd_iops)
     cache_policy, prefetch = SYSTEMS[system]
     # CUDA-UM baseline: page-fault handling per on-demand migration —
     # ~25 us per 2 MiB fault batch (driver fault storm; the paper observes
@@ -83,12 +91,13 @@ def build_engine(arch_id="switch-base-128", system="moe-infinity", *,
                        dram_cache_experts=dram_slots,
                        cache_policy=cache_policy,
                        prefetch=prefetch, bytes_per_param=4,
-                       hw=hw or HWConfig(),
+                       hw=hw,
                        scheduler=SchedulerConfig(max_batch=max_batch,
                                                  policy=policy),
                        scheduling=scheduling,
                        keep_request_eams=keep_request_eams,
-                       demand_overhead_s=demand_overhead)
+                       demand_overhead_s=demand_overhead,
+                       tier_aware=tier_aware)
     prefetcher = None
     if prefetch == "topk":
         from repro.core.prefetch import TopKPrefetcher

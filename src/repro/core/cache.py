@@ -132,6 +132,39 @@ class LFUCache(CachePolicy):
         return best if best is not None else cached[0]
 
 
+class ReuseAwareDRAMCache(LRUCache):
+    """DRAM-tier policy for the three-tier SSD→DRAM→GPU pipeline.
+
+    Algorithm 2 scores by the *current* procedure's EAM, which is the
+    right horizon for the GPU cache but nearly blind for the DRAM tier:
+    between procedures the EAM resets, every expert floors to ε·decay and
+    DRAM victims degrade to layer order — so cross-request reuse (the
+    signal eMoE exploits at the SSD boundary) is thrown away, and an LRU
+    DRAM tier beats Algorithm 2 there by a wide margin in our replay.
+
+    Victim = least-recently-used among the *activation-cold* experts
+    (no observed tokens and no EAMC-predicted ratio in the live batch);
+    while any cold expert exists, hot/predicted experts are shielded.
+    Only when everything is hot does Algorithm 2 pick the victim. The
+    GPU tier is untouched."""
+
+    name = "reuse-dram"
+
+    def __init__(self, ctx):
+        super().__init__()
+        self.aa = ActivationAwareCache(ctx)
+
+    def victim(self, cached, protected=frozenset()):
+        eam = self.aa.ctx.cur_eam
+        pred = getattr(self.aa.ctx, "predicted_ratios", None)
+        cold = [k for k in cached if k not in protected
+                and eam[k[0], k[1]] == 0
+                and (pred is None or pred[k[0], k[1]] <= 0)]
+        if cold:
+            return min(cold, key=lambda k: self.last.get(k, 0))
+        return self.aa.victim(cached, protected)
+
+
 class NeighborAwareCache(LRUCache):
     """ZeRO-Infinity-style: LRU over *layer groups* — neighbours (same-layer
     experts) are kept/evicted together, approximated by using the layer's

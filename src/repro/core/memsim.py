@@ -31,9 +31,17 @@ MAX_PRIORITY = float("inf")
 class HWConfig:
     dram_to_dev_gbps: float = 25.0     # PCIe 4.0 x16 effective
     ssd_to_dram_gbps: float = 6.0      # NVMe RAID0
+    # NVMe submission/seek cost: each SSD read pays 1/ssd_iops seconds on
+    # top of the bandwidth term. 0 = ideal drive (keeps pre-three-tier
+    # configs bit-identical); a consumer NVMe is ~500k–1M read IOPS.
+    ssd_iops: float = 0.0
     # compute model (per device)
     peak_flops: float = 27.8e12        # A5000 fp32 (the paper's testbed)
     hbm_gbps: float = 768.0            # GDDR6
+
+    @property
+    def ssd_op_latency_s(self) -> float:
+        return 1.0 / self.ssd_iops if self.ssd_iops > 0 else 0.0
 
 
 PAPER_8GPU = HWConfig()
@@ -41,11 +49,22 @@ TPU_V5E = HWConfig(dram_to_dev_gbps=32.0, ssd_to_dram_gbps=6.0,
                    peak_flops=197e12, hbm_gbps=819.0)
 
 
-class Link:
-    """One transfer queue with a single worker (one expert in flight)."""
+# prefetch priorities live in (0, ~1] (activation ratio × layer decay,
+# possibly × a tier miss-cost weight); anything at or above this threshold
+# is a demand fetch jumping the queue (MAX_PRIORITY or the engine's 1e30)
+DEMAND_CLASS = 1e29
 
-    def __init__(self, gbps: float):
+
+class Link:
+    """One transfer queue with a single worker (one expert in flight).
+
+    ``op_latency`` is a fixed per-transfer setup cost (NVMe submission /
+    seek for the SSD link; 0 for PCIe copies).
+    """
+
+    def __init__(self, gbps: float, op_latency: float = 0.0):
         self.gbps = gbps
+        self.op_latency = op_latency
         self._heap: list = []
         self._counter = itertools.count()
         self._entries: Dict[Key, list] = {}
@@ -54,6 +73,9 @@ class Link:
         # (key, start, end, priority)
         self.bytes_moved = 0.0
         self.n_transfers = 0
+        # demand/prefetch split of the traffic (per-tier accounting)
+        self.demand_bytes = 0.0
+        self.prefetch_bytes = 0.0
 
     # -- queue management (paper §5.3: re-enqueue replaces priority) ---------
     def submit(self, key: Key, priority: float, size: int,
@@ -119,7 +141,7 @@ class MemSim:
         # links (a multi-GPU server, or a v5e host's multiple PCIe roots)
         self.gpu_links = [Link(hw.dram_to_dev_gbps)
                           for _ in range(max(1, n_gpu_links))]
-        self.ssd_link = Link(hw.ssd_to_dram_gbps)
+        self.ssd_link = Link(hw.ssd_to_dram_gbps, hw.ssd_op_latency_s)
         self.on_gpu: Set[Key] = set()
         self.in_dram: Set[Key] = set()
         self.on_arrive = on_arrive or (lambda key, tier, now: None)
@@ -131,6 +153,12 @@ class MemSim:
         self.stall_time = 0.0
         self.demand_fetches = 0
         self.prefetch_hits = 0
+        # three-tier accounting: where did each demand fetch find the
+        # expert (DRAM = the prefetcher staged or warm-start placed it one
+        # hop away; SSD = it pays both hops), and how many SSD→DRAM
+        # stagings the prefetcher completed
+        self.demand_from: Dict[str, int] = {DRAM: 0, SSD: 0}
+        self.staged_prefetches = 0
 
     # -- transfer mechanics ----------------------------------------------------
     @property
@@ -151,7 +179,38 @@ class MemSim:
         return sum(l.bytes_moved for l in self.gpu_links)
 
     def _xfer_time(self, link: Link) -> float:
-        return self.expert_bytes / (link.gbps * 1e9)
+        return self.expert_bytes / (link.gbps * 1e9) + link.op_latency
+
+    # -- tier model (three-tier SSD→DRAM→GPU pipeline) ----------------------
+    def tier_of(self, key: Key) -> str:
+        if key in self.on_gpu:
+            return GPU
+        if key in self.in_dram:
+            return DRAM
+        return SSD
+
+    def miss_cost(self, tier: str) -> float:
+        """Seconds an unstaged demand fetch pays when the expert currently
+        lives in ``tier`` (hop times are sequential for one expert; the
+        pipeline only overlaps hops of *different* experts)."""
+        if tier == GPU:
+            return 0.0
+        dram_hop = self._xfer_time(self.gpu_link)
+        if tier == DRAM:
+            return dram_hop
+        return self._xfer_time(self.ssd_link) + dram_hop
+
+    def tier_weight(self, key: Key) -> float:
+        """Miss cost of the expert's current tier relative to a DRAM
+        resident's — the tier-aware prefetch priority multiplier. 1.0 for
+        DRAM residents, 0.0 for GPU residents (nothing left to fetch;
+        ``submit_prefetch`` drops them before the weight matters), and
+        1.0 for everything whenever the SSD hop is free (∞ bandwidth,
+        0 op latency), so two-tier configs are bit-identical."""
+        dram_hop = self._xfer_time(self.gpu_link)
+        if dram_hop <= 0.0:
+            return 1.0
+        return self.miss_cost(self.tier_of(key)) / dram_hop
 
     def _run_links(self, until: float) -> None:
         """Drain link work up to virtual time ``until``."""
@@ -179,7 +238,7 @@ class MemSim:
                     if start > until:
                         link._requeue(key, size, pr, avail)
                         break
-                    if pr < 1e29 and not self.admit(key, tier, pr):
+                    if pr < DEMAND_CLASS and not self.admit(key, tier, pr):
                         # NOTE: do NOT touch _gpu_pending_priority — it
                         # belongs to the SSD→DRAM pipeline stage (a demand
                         # fetch may have raised it).
@@ -197,6 +256,10 @@ class MemSim:
                     link.inflight = (key, start, start + dur, pr)
                     link.busy_until = start + dur
                     link.bytes_moved += size
+                    if pr >= DEMAND_CLASS:
+                        link.demand_bytes += size
+                    else:
+                        link.prefetch_bytes += size
                     link.n_transfers += 1
                     progressed = True
 
@@ -209,6 +272,8 @@ class MemSim:
     def _arrive(self, key: Key, tier: str, t: float, priority: float) -> None:
         if tier == DRAM:
             self.in_dram.add(key)
+            if priority < DEMAND_CLASS:
+                self.staged_prefetches += 1
             self.on_arrive(key, DRAM, t)
             # multi-tier pipelining (§5.3): re-enqueue for DRAM→GPU with the
             # original priority if it was headed to the device
@@ -249,6 +314,11 @@ class MemSim:
             self.prefetch_hits += 1
             return 0.0
         self.demand_fetches += 1
+        # tier accounting: a DRAM resident (or an expert already riding the
+        # DRAM→GPU link) pays one hop; an SSD resident pays both
+        in_dram_level = (key in self.in_dram or self._gpu_inflight(key)
+                         is not None)
+        self.demand_from[DRAM if in_dram_level else SSD] += 1
         t0 = self.clock
         if self.demand_overhead:
             # fault-handling time passes; background transfers continue
@@ -266,6 +336,7 @@ class MemSim:
                                       now=self.clock)
         else:
             if not (self.ssd_link.inflight and self.ssd_link.inflight[0] == key):
+                self._preempt_ssd_prefetch(key)
                 self.ssd_link.submit(key, MAX_PRIORITY, self.expert_bytes,
                                      now=self.clock)
             self._gpu_pending_priority[key] = MAX_PRIORITY
@@ -294,6 +365,33 @@ class MemSim:
         stall = self.clock - t0
         self.stall_time += stall
         return stall
+
+    def _preempt_ssd_prefetch(self, key: Key) -> None:
+        """NVMe urgent-class demand read: abort an in-flight *background*
+        staging on the SSD link (requeued, restarted from scratch) so the
+        demand read starts immediately instead of waiting out a ~ms-scale
+        speculative transfer. Demands never abort each other, and the PCIe
+        link is untouched (its transfers are sub-ms; aborting a DMA
+        mid-flight buys nothing and would break two-tier bit-invariance)."""
+        infl = self.ssd_link.inflight
+        if infl is None:
+            return
+        ikey, _start, _end, pr = infl
+        if ikey == key or pr >= DEMAND_CLASS:
+            return
+        # a sibling expert demanded this layer escalates via
+        # _gpu_pending_priority while its staging is already in flight at
+        # the old priority — it is a demand too, don't restart it
+        if self._gpu_pending_priority.get(ikey, 0.0) >= DEMAND_CLASS:
+            return
+        link = self.ssd_link
+        link.inflight = None
+        link.busy_until = self.clock
+        # the aborted read never completed: unwind its start-time accounting
+        link.bytes_moved -= self.expert_bytes
+        link.prefetch_bytes -= self.expert_bytes
+        link.n_transfers -= 1
+        link.submit(ikey, pr, self.expert_bytes, now=self.clock)
 
     def _finish_until(self, t: float) -> None:
         self._run_links(t)

@@ -20,9 +20,9 @@ import numpy as np
 
 from repro.core.cache import (ActivationAwareCache, CachePolicy, ExpertCache,
                               LFUCache, LRUCache, NeighborAwareCache,
-                              OracleCache)
+                              OracleCache, ReuseAwareDRAMCache)
 from repro.core.eam import EAMC
-from repro.core.memsim import DRAM, GPU, HWConfig, MemSim, PAPER_8GPU
+from repro.core.memsim import DRAM, GPU, HWConfig, MemSim, PAPER_8GPU, SSD
 from repro.core.prefetch import (ActivationAwarePrefetcher, Prefetcher,
                                  SequenceContext)
 
@@ -44,6 +44,11 @@ class OffloadConfig:
     demand_overhead_s: float = 0.0       # per-demand fault overhead (UM)
     n_gpu_links: int = 1                 # parallel DRAM→device links (§7)
     transfer_bytes_factor: float = 1.0   # <1.0 = quantized transfers
+    # three-tier pipeline: weight prefetch priorities by the miss cost of
+    # the expert's current tier (SSD residents stage SSD→DRAM early). A
+    # no-op when the SSD hop is free, so False only exists for the
+    # bit-invariance tests and ablations.
+    tier_aware: bool = True
 
 
 class OffloadEngine:
@@ -81,11 +86,13 @@ class OffloadEngine:
         else:
             raise ValueError(cfg.cache_policy)
         self.gpu_cache = ExpertCache(cfg.gpu_cache_experts, gpu_policy)
-        # host-memory tier uses the same policy family (paper §6.2: shared
-        # weight-decay strategy); LRU for baselines
+        # host-memory tier: recency with activation-aware shielding
+        # (Algorithm 2's horizon is one procedure — too short for the
+        # DRAM tier's cross-request reuse; see ReuseAwareDRAMCache);
+        # plain LRU for baselines
         self.dram_cache = ExpertCache(
             cfg.dram_cache_experts,
-            ActivationAwareCache(self.ctx)
+            ReuseAwareDRAMCache(self.ctx)
             if cfg.cache_policy == "moe-infinity" else LRUCache())
 
         self.sim = MemSim(
@@ -94,6 +101,8 @@ class OffloadEngine:
             on_arrive=self._on_arrive, admit=self._admit,
             demand_overhead=cfg.demand_overhead_s,
             n_gpu_links=cfg.n_gpu_links)
+        self.prefetcher.tier_weight = (self.sim.tier_weight
+                                       if cfg.tier_aware else None)
         self._protected: frozenset = frozenset()
         self.warm_start()
 
@@ -124,8 +133,11 @@ class OffloadEngine:
         if isinstance(cache.policy, ActivationAwareCache):
             vscore = cache.policy.scores([victim])[0]
         else:
-            # baseline policies have no comparable score; admit (their
-            # systems copy unconditionally, which is part of why they lose)
+            # no comparable score: baseline policies (their systems copy
+            # unconditionally, which is part of why they lose) and — by
+            # design — the reuse-aware DRAM tier, which admits stagings
+            # unconditionally like the LRU family it extends (its victim
+            # is the least-recently-used activation-cold expert)
             return True
         return priority > vscore
 
@@ -144,10 +156,11 @@ class OffloadEngine:
     def _demote(self, key: Key, now: float) -> None:
         """A GPU-evicted expert falls back to the DRAM tier (no copy is
         simulated: the DRAM image is still valid — weights are read-only —
-        so demotion is a residency-set update). Like prefetch admission
-        (§6.2: replacement decided before the copy), the activation-aware
-        DRAM tier only takes the demoted expert when its score beats the
-        would-be victim's; baselines page back unconditionally (CUDA-UM)."""
+        so demotion is a residency-set update). An Alg-2-scored DRAM tier
+        only takes the demoted expert when its score beats the would-be
+        victim's; the default reuse-aware DRAM tier and the baselines
+        demote unconditionally (LRU semantics: the GPU-evicted expert was
+        recently used on-device, so it displaces the LRU cold resident)."""
         if key in self.dram_cache:
             self.sim.in_dram.add(key)
             return
@@ -282,12 +295,22 @@ class OffloadEngine:
 
     # -- metrics ------------------------------------------------------------------
     def stats(self) -> dict:
+        sim = self.sim
         return {
             "gpu_hit_ratio": self.gpu_cache.hit_ratio,
-            "demand_fetches": self.sim.demand_fetches,
-            "prefetch_hits": self.sim.prefetch_hits,
-            "stall_time": self.sim.stall_time,
-            "pcie_bytes": self.sim.gpu_bytes_moved,
-            "ssd_bytes": self.sim.ssd_link.bytes_moved,
-            "clock": self.sim.clock,
+            "dram_hit_ratio": self.dram_cache.hit_ratio,
+            "demand_fetches": sim.demand_fetches,
+            "demand_from_dram": sim.demand_from[DRAM],
+            "demand_from_ssd": sim.demand_from[SSD],
+            "staged_prefetches": sim.staged_prefetches,
+            "prefetch_hits": sim.prefetch_hits,
+            "stall_time": sim.stall_time,
+            "pcie_bytes": sim.gpu_bytes_moved,
+            "pcie_demand_bytes": sum(l.demand_bytes for l in sim.gpu_links),
+            "pcie_prefetch_bytes": sum(l.prefetch_bytes
+                                       for l in sim.gpu_links),
+            "ssd_bytes": sim.ssd_link.bytes_moved,
+            "ssd_demand_bytes": sim.ssd_link.demand_bytes,
+            "ssd_prefetch_bytes": sim.ssd_link.prefetch_bytes,
+            "clock": sim.clock,
         }

@@ -50,9 +50,22 @@ class SequenceContext:
 
 
 class Prefetcher:
-    """Common interface: ``plan(cur_layer)`` → list of (key, priority)."""
+    """Common interface: ``plan(cur_layer)`` → list of (key, priority).
+
+    ``tier_weight`` (optional, set by the offload engine) makes a planner
+    tier-aware: a callable ``key -> multiplier`` equal to the expert's
+    current-tier demand-miss cost relative to a DRAM resident's, so an
+    SSD-resident predicted expert (whose miss pays the NVMe hop *and* the
+    PCIe hop) is staged early. DRAM residents weigh 1.0 (GPU residents 0,
+    but those are dropped before submission), and everything weighs 1.0
+    when the SSD hop is free — two-tier configs are unchanged.
+    """
 
     name = "none"
+    tier_weight = None   # Optional[Callable[[Key], float]]
+
+    def _w(self, key: Key) -> float:
+        return self.tier_weight(key) if self.tier_weight is not None else 1.0
 
     def plan(self, ctx: SequenceContext, cur_layer: int):
         return []
@@ -105,7 +118,7 @@ class ActivationAwarePrefetcher(Prefetcher):
             for e in range(ctx.n_experts):
                 if ratios[e] <= 0 and not self.include_zero_ratio:
                     continue
-                pr = (ratios[e] + EPSILON) * decay
+                pr = (ratios[e] + EPSILON) * decay * self._w((fl, e))
                 out.append(((fl, e), pr))
         if not self.refine and self._oneshot_plan is None:
             self._oneshot_plan = [(k, p, k[0]) for (k, p) in out]
@@ -168,7 +181,8 @@ class OraclePrefetcher(Prefetcher):
             if n_token <= 0:
                 continue
             for e in np.nonzero(eam[fl])[0]:
-                pr = (eam[fl][e] / n_token + EPSILON) * (1.0 - fl / L)
+                pr = (eam[fl][e] / n_token + EPSILON) * (1.0 - fl / L) \
+                    * self._w((fl, int(e)))
                 out.append(((fl, int(e)), pr))
         return out
 

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 
 from repro.config import INPUT_SHAPES
 from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.launch import hlo_analysis as hlo_analysis_mod
 from repro.launch import roofline
 from repro.launch.input_specs import (decode_inputs, skip_reason,
                                       supports_shape, train_inputs)
@@ -153,11 +154,10 @@ def run_one(arch_id: str, shape_name: str, *, multi_pod: bool,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = hlo_analysis_mod.cost_analysis_dict(compiled)
     # trip-count-aware analysis: cost_analysis counts while bodies once,
     # which undercounts scanned-layer models by ~n_layers (see
     # repro.launch.hlo_analysis)
-    from repro.launch import hlo_analysis
     hlo_text = compiled.as_text()
     hlo_dir = os.environ.get("_DRYRUN_HLO_DIR")
     if hlo_dir:
@@ -166,7 +166,7 @@ def run_one(arch_id: str, shape_name: str, *, multi_pod: bool,
         tag = f"{arch_id}__{shape_name}__{mesh_name}"
         with gzip.open(os.path.join(hlo_dir, tag + ".hlo.gz"), "wt") as f:
             f.write(hlo_text)
-    hcost = hlo_analysis.analyze_hlo(hlo_text)
+    hcost = hlo_analysis_mod.analyze_hlo(hlo_text)
     rec.update(
         cost_corrected={
             "dot_flops": hcost.dot_flops,

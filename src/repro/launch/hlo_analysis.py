@@ -29,6 +29,16 @@ _DTYPE_BYTES = {
 COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
 
+
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` returns a plain dict on some jaxlibs and
+    a one-element list of dicts (per-program) on others; normalize to the
+    dict every caller wants."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 _COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*{")
 _INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
@@ -124,16 +134,20 @@ def _trip_count(cond: Computation) -> Optional[int]:
 
 
 _DOT_DIMS = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
-_DOT_OPERANDS = re.compile(r"\bdot\(\s*%?([\w\.\-]+),\s*%?([\w\.\-]+)")
+# compiled HLO prints operands with their types inline:
+#   dot(f32[256,128]{1,0} %Arg_0.1, f32[128,512]{1,0} %Arg_1.2)
+# older/frontend dumps print bare names:  dot(%Arg_0.1, %Arg_1.2)
+_DOT_LHS = re.compile(
+    r"\bdot\(\s*(?:([a-z0-9]+\[[0-9,]*\])\S*\s+)?%?([\w\.\-]+)")
 
 
 def _dot_flops(ins: Instr, comp: Computation) -> float:
     out_elems, _ = _shape_elems_bytes(ins.shape_str)
-    m = _DOT_OPERANDS.search(ins.op_text)
+    m = _DOT_LHS.search(ins.op_text)
     dims_m = _DOT_DIMS.search(ins.op_text)
     if not m or not dims_m:
         return 2.0 * out_elems  # unknown contraction; minimal estimate
-    lhs = comp.shapes.get(m.group(1))
+    lhs = m.group(1) or comp.shapes.get(m.group(2))
     if lhs is None:
         return 2.0 * out_elems
     sm = _SHAPE_RE.search(lhs)

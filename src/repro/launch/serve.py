@@ -16,11 +16,13 @@ warmup.
 from __future__ import annotations
 
 import argparse
+from dataclasses import replace
 
 import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.memsim import PAPER_8GPU
 from repro.core.tracer import build_eamc
 from repro.models import Model
 from repro.serving import EngineConfig, SchedulerConfig
@@ -49,7 +51,15 @@ def main(argv=None):
                     choices=["prefill", "decode", "stall"],
                     help="continuous-admission policy")
     ap.add_argument("--gpu-cache", type=int, default=4)
-    ap.add_argument("--dram-cache", type=int, default=8)
+    ap.add_argument("--dram-cache", type=int, default=8,
+                    help="host-DRAM cache slots; experts beyond it are "
+                         "SSD-resident and pay the NVMe hop on a miss")
+    ap.add_argument("--ssd-gbps", type=float, default=None,
+                    help="SSD→DRAM bandwidth in GB/s (e.g. 3.5 for a "
+                         "consumer NVMe; 'inf' disables the SSD tier)")
+    ap.add_argument("--ssd-iops", type=float, default=0.0,
+                    help="NVMe read IOPS: each SSD read pays 1/iops s "
+                         "setup on top of the bandwidth term (0 = ideal)")
     ap.add_argument("--eamc-capacity", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -74,9 +84,15 @@ def main(argv=None):
     dataset = [b["tokens"][0] for b in data.batches(max(10, args.requests))]
     eamc = build_eamc(run_fn, dataset, capacity=args.eamc_capacity)
 
+    hw = PAPER_8GPU
+    if args.ssd_gbps is not None or args.ssd_iops:
+        hw = replace(hw,
+                     ssd_to_dram_gbps=(args.ssd_gbps if args.ssd_gbps
+                                       is not None else hw.ssd_to_dram_gbps),
+                     ssd_iops=args.ssd_iops)
     srv = JaxModelServer(
         EngineConfig(arch=cfg, gpu_cache_experts=args.gpu_cache,
-                     dram_cache_experts=args.dram_cache,
+                     dram_cache_experts=args.dram_cache, hw=hw,
                      scheduler=SchedulerConfig(max_batch=args.slots,
                                                policy=args.policy),
                      keep_request_eams=False),
@@ -112,6 +128,15 @@ def main(argv=None):
           f"mean-tok-lat={stats['mean_token_latency']*1e3:.2f}ms, "
           f"mean-e2e={e2e*1e3:.1f}ms, "
           f"compiles={dict(srv.compile_counts)}")
+    print(f"tiers: demand dram={stats['demand_from_dram']} "
+          f"ssd={stats['demand_from_ssd']} "
+          f"staged={stats['staged_prefetches']}, "
+          f"pcie={stats['pcie_bytes']/1e6:.1f}MB "
+          f"(demand {stats['pcie_demand_bytes']/1e6:.1f}), "
+          f"ssd={stats['ssd_bytes']/1e6:.1f}MB "
+          f"(demand {stats['ssd_demand_bytes']/1e6:.1f}), "
+          f"miss-cost dram={stats['miss_cost_dram']*1e3:.2f}ms "
+          f"ssd={stats['miss_cost_ssd']*1e3:.2f}ms")
 
 
 if __name__ == "__main__":

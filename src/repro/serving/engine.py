@@ -31,7 +31,7 @@ import numpy as np
 
 from repro.config import ArchConfig
 from repro.core.eam import EAMC
-from repro.core.memsim import HWConfig, PAPER_8GPU
+from repro.core.memsim import DRAM, HWConfig, PAPER_8GPU, SSD
 from repro.core.offload import OffloadConfig, OffloadEngine
 from repro.core.tracer import SequenceTracer
 from repro.serving.perf_model import (expert_bytes, layer_cost,
@@ -94,6 +94,7 @@ class EngineConfig:
     demand_overhead_s: float = 0.0   # UM-style per-fault handling overhead
     n_gpu_links: int = 1             # parallel DRAM→device links
     transfer_bytes_factor: float = 1.0  # <1 = quantized expert transfers
+    tier_aware: bool = True          # SSD-tier-aware prefetch priorities
 
 
 class StepEngine:
@@ -124,6 +125,7 @@ class StepEngine:
             demand_overhead_s=cfg.demand_overhead_s,
             n_gpu_links=cfg.n_gpu_links,
             transfer_bytes_factor=cfg.transfer_bytes_factor,
+            tier_aware=cfg.tier_aware,
         )
         self.offload = OffloadEngine(ocfg, eamc=eamc, prefetcher=prefetcher,
                                      cache_policy=cache_policy)
@@ -315,8 +317,13 @@ class StepEngine:
     # -- metrics ---------------------------------------------------------------
     def stats(self) -> dict:
         s = self.offload.stats()
+        sim = self.offload.sim
+        # the simulator's own hop model, not perf_model's analytic mirror
+        # (they can differ by expert-size truncation)
         s.update(prefill_tokens=self.prefill_tokens,
-                 decode_tokens=self.decode_tokens)
+                 decode_tokens=self.decode_tokens,
+                 miss_cost_dram=sim.miss_cost(DRAM),
+                 miss_cost_ssd=sim.miss_cost(SSD))
         lat = np.array(self.token_latencies)
         if len(lat):
             s.update(mean_token_latency=float(lat.mean()),

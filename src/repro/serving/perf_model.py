@@ -67,6 +67,21 @@ def expert_bytes(cfg: ArchConfig, bytes_per_param: int = 2) -> int:
     return int(config_mod._ffn_params(cfg, m.d_expert) * bytes_per_param)
 
 
+def tier_miss_costs(hw: HWConfig, expert_bytes_: float) -> dict:
+    """Seconds one unstaged demand fetch pays per source tier of the
+    SSD→DRAM→GPU hierarchy (hops are sequential for a single expert; the
+    pipeline only overlaps hops of different experts). The ``ssd/dram``
+    ratio is the tier-aware prefetch priority multiplier.
+
+    Analytic mirror of ``MemSim.miss_cost`` for sizing studies without a
+    simulator instance; running engines report the simulator's own values
+    (which truncate expert bytes) in ``stats()``."""
+    dram_hop = expert_bytes_ / (hw.dram_to_dev_gbps * 1e9)
+    ssd_hop = expert_bytes_ / (hw.ssd_to_dram_gbps * 1e9) \
+        + hw.ssd_op_latency_s
+    return {"dram": dram_hop, "ssd": ssd_hop + dram_hop}
+
+
 def layer_time_mixed(cost: LayerCost, hw: HWConfig,
                      token_ctx: "list[tuple[int, int]]",
                      active_expert_tokens: float = 0.0) -> float:

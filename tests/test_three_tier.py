@@ -1,0 +1,236 @@
+"""Three-tier SSD→DRAM→GPU pipeline: staging overlap, demotion chain,
+unstaged-hop demand costs, NVMe IOPS, and the ∞-bandwidth-SSD
+bit-invariance contract (two-tier configs reproduce pre-SSD numbers)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.eam import EAMC
+from repro.core.memsim import DRAM, GPU, HWConfig, MemSim, SSD
+from repro.core.offload import OffloadConfig, OffloadEngine
+from repro.serving import EngineConfig, ServingEngine
+from repro.serving.engine import RoutingOracle
+from repro.serving.perf_model import tier_miss_costs
+from repro.serving.workload import (WorkloadConfig, attach_arrivals,
+                                    azure_like_arrivals, make_dataset)
+
+HW = HWConfig(dram_to_dev_gbps=10.0, ssd_to_dram_gbps=1.0)
+MB100 = 100_000_000   # SSD hop 0.1 s, DRAM hop 0.01 s
+
+
+def _sim(hw=HW, **kw):
+    return MemSim(hw, expert_bytes=MB100, **kw)
+
+
+# ---------------------------------------------------------------------------
+# memsim mechanics
+# ---------------------------------------------------------------------------
+
+def test_staging_overlap_pipelines_experts():
+    """The DRAM hop of expert A overlaps the SSD hop of expert B: two
+    SSD residents complete in ssd+ssd+dram, not 2×(ssd+dram)."""
+    sim = _sim()
+    sim.submit_prefetch(("a", 0), 1.0)
+    sim.submit_prefetch(("b", 0), 0.9)
+    sim.advance(0.11)                       # a: SSD [0,.1], DRAM [.1,.11]
+    assert ("a", 0) in sim.on_gpu
+    assert ("b", 0) not in sim.in_dram      # b's SSD hop ends at .2
+    sim.advance(0.21 - 0.11 + 1e-9)         # b: SSD [.1,.2], DRAM [.2,.21]
+    assert ("b", 0) in sim.on_gpu
+    assert sim.clock < 2 * (0.1 + 0.01) + 1e-9
+
+
+def test_demand_fetch_pays_sum_of_unstaged_hops():
+    sim = _sim()
+    # SSD resident: both hops
+    assert sim.demand_fetch(("s", 0)) == pytest.approx(0.11, rel=1e-6)
+    # DRAM resident (staged): one hop
+    sim.in_dram.add(("d", 0))
+    assert sim.demand_fetch(("d", 0)) == pytest.approx(0.01, rel=1e-6)
+    assert sim.demand_from == {DRAM: 1, SSD: 1}
+
+
+def test_demand_fetch_of_partially_staged_expert_pays_remainder():
+    """If the prefetcher's SSD hop is already in flight, the demand fetch
+    only waits for the rest of it plus the DRAM hop."""
+    sim = _sim()
+    sim.submit_prefetch(("x", 0), 0.8)
+    sim.advance(0.06)                       # 60% through the SSD hop
+    stall = sim.demand_fetch(("x", 0))
+    assert stall == pytest.approx(0.04 + 0.01, rel=1e-6)
+    assert sim.demand_from[SSD] == 1
+
+
+def test_demand_preempts_inflight_ssd_staging():
+    """NVMe urgent class: a demand read aborts an in-flight background
+    staging (restarted afterwards) instead of waiting it out."""
+    sim = _sim()
+    sim.submit_prefetch(("p", 0), 0.5)
+    sim.advance(0.05)                       # p's SSD hop in flight [0, .1]
+    stall = sim.demand_fetch(("q", 0))
+    assert stall == pytest.approx(0.11, rel=1e-6)   # not 0.05 + 0.11
+    sim.advance(1.0)
+    assert ("p", 0) in sim.on_gpu           # aborted staging completed later
+
+
+def test_staged_prefetch_counter_and_byte_split():
+    sim = _sim()
+    sim.submit_prefetch(("p", 0), 0.5)      # prefetch: SSD + DRAM hops
+    sim.advance(0.2)
+    sim.demand_fetch(("q", 0))              # demand: SSD + DRAM hops
+    assert sim.staged_prefetches == 1       # p's SSD→DRAM staging
+    assert sim.ssd_link.prefetch_bytes == MB100
+    assert sim.ssd_link.demand_bytes == MB100
+    assert sim.gpu_link.prefetch_bytes == MB100
+    assert sim.gpu_link.demand_bytes == MB100
+
+
+def test_ssd_iops_adds_per_read_latency():
+    hw = HWConfig(dram_to_dev_gbps=10.0, ssd_to_dram_gbps=1.0, ssd_iops=20.0)
+    sim = _sim(hw)                          # +0.05 s per SSD read
+    assert sim.demand_fetch(("k", 0)) == pytest.approx(0.11 + 0.05, rel=1e-6)
+    # the PCIe link pays no op latency
+    sim.in_dram.add(("m", 0))
+    assert sim.demand_fetch(("m", 0)) == pytest.approx(0.01, rel=1e-6)
+
+
+def test_tier_weight_is_relative_miss_cost():
+    sim = _sim()
+    sim.on_gpu.add(("g", 0))
+    sim.in_dram.add(("d", 0))
+    assert sim.tier_of(("g", 0)) == GPU and sim.tier_weight(("g", 0)) == 0.0
+    assert sim.tier_of(("d", 0)) == DRAM and sim.tier_weight(("d", 0)) == 1.0
+    assert sim.tier_of(("s", 0)) == SSD
+    assert sim.tier_weight(("s", 0)) == pytest.approx(0.11 / 0.01)
+    # free SSD hop → weight collapses to 1 (two-tier config)
+    free = _sim(HWConfig(dram_to_dev_gbps=10.0,
+                         ssd_to_dram_gbps=float("inf")))
+    assert free.tier_weight(("s", 0)) == 1.0
+    assert tier_miss_costs(HW, MB100)["ssd"] == pytest.approx(0.11)
+
+
+# ---------------------------------------------------------------------------
+# offload engine: demotion chain
+# ---------------------------------------------------------------------------
+
+def _offload(gpu=2, dram=2, hw=HW, **kw):
+    return OffloadEngine(OffloadConfig(
+        n_moe_layers=4, n_experts=4, expert_bytes=MB100,
+        gpu_cache_experts=gpu, dram_cache_experts=dram, hw=hw, **kw))
+
+
+def test_demotion_chain_gpu_to_dram_to_ssd_only():
+    """Eviction cascade: a GPU eviction demotes to the DRAM tier; the DRAM
+    eviction it causes demotes to SSD-resident-only, whose next access
+    pays both hops again."""
+    eng = _offload(gpu=2, dram=2, cache_policy="lru")
+    sim = eng.sim
+    # warm start: (0,0),(0,1) on GPU; (0,2),(0,3) in DRAM
+    assert sim.tier_of((0, 2)) == DRAM
+    # touch (1,0): demand fetch from SSD → lands on GPU, evicting an LRU
+    # GPU resident, which demotes into the (full) DRAM cache, whose victim
+    # becomes SSD-only
+    stall = eng.on_layer(1, np.array([3, 0, 0, 0]), 0.0)
+    assert stall > 0
+    assert (1, 0) in eng.gpu_cache and (1, 0) in sim.on_gpu
+    gpu_evicted = [k for k in [(0, 0), (0, 1)] if k not in eng.gpu_cache]
+    assert len(gpu_evicted) == 1 and sim.tier_of(gpu_evicted[0]) == DRAM
+    assert gpu_evicted[0] in eng.dram_cache
+    # (1,0)'s staged copy stays valid in DRAM (read-only weights), so the
+    # full DRAM cache evicted BOTH warm-start residents to SSD-only: one
+    # for the staging, one for the GPU victim's demotion
+    for k in [(0, 2), (0, 3)]:
+        assert sim.tier_of(k) == SSD and k not in eng.dram_cache
+        # and refetching either pays both hops again
+        assert sim.miss_cost(sim.tier_of(k)) == pytest.approx(0.11, rel=1e-6)
+    assert (1, 0) in eng.dram_cache
+
+
+def test_tier_aware_flag_reaches_prefetcher():
+    eng = _offload(tier_aware=True)
+    assert eng.prefetcher.tier_weight is not None
+    eng2 = _offload(tier_aware=False)
+    assert eng2.prefetcher.tier_weight is None
+
+
+# ---------------------------------------------------------------------------
+# engine-level: SSD pressure + bit-invariance
+# ---------------------------------------------------------------------------
+
+def _engine(prefetch="moe-infinity", *, dram_slots, ssd_gbps=1.0,
+            tier_aware=True, gpu_slots=24, n=12, rps=4.0, seed=3):
+    arch = get_config("switch-base-128")
+    nmoe = sum(arch.is_moe_layer(i) for i in range(arch.n_layers))
+    oracle = RoutingOracle(n_layers=nmoe, n_experts=128, n_tasks=3,
+                           top_k=1, seed=7)
+    rng = np.random.default_rng(1)
+    eams = []
+    for i in range(30):
+        eam = np.zeros((nmoe, 128))
+        for it in range(12):
+            eam += oracle.route_tokens(i % 3, 16 if it == 0 else 1, rng)
+        eams.append(eam)
+    eamc = EAMC(capacity=16)
+    eamc.construct(eams)
+    hw = HWConfig(ssd_to_dram_gbps=ssd_gbps)
+    cfg = EngineConfig(arch=arch, gpu_cache_experts=gpu_slots,
+                       dram_cache_experts=dram_slots, hw=hw,
+                       prefetch=prefetch, bytes_per_param=4,
+                       tier_aware=tier_aware)
+    eng = ServingEngine(cfg, eamc=eamc, oracle=oracle)
+    reqs = make_dataset(WorkloadConfig(prompt_len=(16, 32),
+                                       output_len=(4, 8)), n, seed=2)
+    attach_arrivals(reqs, azure_like_arrivals(n, rps=rps, seed=seed))
+    return eng, reqs
+
+
+STAT_KEYS = ("gpu_hit_ratio", "dram_hit_ratio", "demand_fetches",
+             "demand_from_dram", "demand_from_ssd", "staged_prefetches",
+             "stall_time", "pcie_bytes", "ssd_bytes", "clock",
+             "mean_token_latency")
+
+
+def test_infinite_ssd_bandwidth_is_bit_identical_to_two_tier():
+    """With a free SSD hop every tier weight is 1.0, so the tier-aware
+    pipeline must reproduce the two-tier engine's metrics bit for bit
+    (tier_aware=False routes priorities exactly as the pre-SSD code)."""
+    a, ra = _engine(dram_slots=40, ssd_gbps=float("inf"), tier_aware=True)
+    a.run(ra)
+    b, rb = _engine(dram_slots=40, ssd_gbps=float("inf"), tier_aware=False)
+    b.run(rb)
+    sa, sb = a.stats(), b.stats()
+    for k in STAT_KEYS:
+        assert sa[k] == sb[k], k
+    assert [r.latency for r in ra] == [r.latency for r in rb]
+
+
+def test_all_experts_in_dram_is_bit_identical_regardless_of_ssd():
+    """dram_cache_experts ≥ expert set: nothing is ever SSD-resident, so
+    the SSD tier (any bandwidth) and the tier weighting are no-ops."""
+    arch = get_config("switch-base-128")
+    total = 128 * sum(arch.is_moe_layer(i) for i in range(arch.n_layers))
+    a, ra = _engine(dram_slots=total, ssd_gbps=0.5, tier_aware=True)
+    a.run(ra)
+    b, rb = _engine(dram_slots=total, ssd_gbps=8.0, tier_aware=False)
+    b.run(rb)
+    sa, sb = a.stats(), b.stats()
+    assert sa["demand_from_ssd"] == 0 and sa["ssd_bytes"] == 0.0
+    for k in STAT_KEYS:
+        assert sa[k] == sb[k], k
+
+
+def test_prefetch_beats_demand_fetch_on_ssd_tier():
+    """Experts ≫ host DRAM: activation-aware prefetch must beat pure
+    demand fetching on per-token latency when misses pay the NVMe hop.
+    (Relies on demand preemption of in-flight stagings — without it,
+    prefetch occupancy on the single-worker SSD link inverts this on
+    slow drives. See DESIGN.md §3.)"""
+    a, ra = _engine("moe-infinity", dram_slots=200, gpu_slots=120,
+                    ssd_gbps=3.5)
+    a.run(ra)
+    b, rb = _engine("none", dram_slots=200, gpu_slots=120, ssd_gbps=3.5)
+    b.run(rb)
+    sa, sb = a.stats(), b.stats()
+    assert sa["demand_from_ssd"] < sb["demand_from_ssd"]
+    assert sa["mean_token_latency"] < sb["mean_token_latency"]
+    assert sa["staged_prefetches"] > 0
