@@ -1,4 +1,9 @@
 import os
+# The dry-run always compiles against the *host* platform with a forced
+# device count; a JAX_PLATFORMS=tpu/gpu leaking in from the caller's
+# environment would bypass the override below and abort off-accelerator.
+# _DRYRUN_PLATFORM opts out for AOT-against-real-topology experiments.
+os.environ["JAX_PLATFORMS"] = os.environ.get("_DRYRUN_PLATFORM", "cpu")
 os.environ["XLA_FLAGS"] = (os.environ.get("_DRYRUN_XLA_EXTRA", "")
                            + " --xla_force_host_platform_device_count="
                            + os.environ.get("_DRYRUN_DEVICES", "512")).strip()
@@ -127,13 +132,17 @@ def build_lowerable(arch_id: str, shape_name: str, mesh, *,
     return serve_step, (params_in, cache, token)
 
 
+def _mesh_name(multi_pod: bool, debug_mesh: bool) -> str:
+    return ("debug-multi" if multi_pod else "debug") if debug_mesh \
+        else ("2x16x16" if multi_pod else "16x16")
+
+
 def run_one(arch_id: str, shape_name: str, *, multi_pod: bool,
             debug_mesh: bool = False, with_optimizer: bool = True,
             overrides=None, sharding_mode: str = "auto") -> dict:
     cfg = _apply_overrides(get_config(arch_id), overrides)
     shape = INPUT_SHAPES[shape_name]
-    mesh_name = ("debug-multi" if multi_pod else "debug") if debug_mesh \
-        else ("2x16x16" if multi_pod else "16x16")
+    mesh_name = _mesh_name(multi_pod, debug_mesh)
     rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
            "kind": shape.kind, "status": "ok",
            "overrides": list(overrides or [])}
@@ -191,6 +200,16 @@ def run_one(arch_id: str, shape_name: str, *, multi_pod: bool,
     return rec
 
 
+def _cached_ok(path: str) -> bool:
+    """Error (or unreadable) records are not cache hits — rerun them, so a
+    failed refresh can never permanently shadow a good record in --out."""
+    try:
+        with open(path) as f:
+            return json.load(f).get("status") != "error"
+    except (OSError, ValueError):
+        return False
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -227,7 +246,7 @@ def main(argv=None):
     for a, s, mp in combos:
         tag = f"{a}__{s}__{'multi' if mp else 'single'}{args.tag_suffix}"
         path = os.path.join(args.out, tag + ".json")
-        if os.path.exists(path):
+        if os.path.exists(path) and _cached_ok(path):
             print(f"[skip] {tag} (cached)")
             continue
         print(f"[run ] {tag} ...", flush=True)
@@ -238,12 +257,13 @@ def main(argv=None):
                           sharding_mode=args.sharding)
         except Exception as e:  # noqa: BLE001
             rec = {"arch": a, "shape": s,
-                   "mesh": "multi" if mp else "single",
+                   "mesh": _mesh_name(mp, args.debug_mesh),
                    "status": "error", "error": f"{type(e).__name__}: {e}",
                    "traceback": traceback.format_exc()[-4000:]}
             failures += 1
         with open(path, "w") as f:
             json.dump(rec, f, indent=1)
+            f.write("\n")
         print(f"[done] {tag}: {rec['status']}"
               + (f" ({rec.get('t_compile_s', '?')}s compile)"
                  if rec["status"] == "ok" else

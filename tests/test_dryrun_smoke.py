@@ -6,29 +6,73 @@ import json
 import os
 import subprocess
 import sys
+import tempfile
 
 import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
+# wall-clock fields legitimately jitter run to run; everything else in a
+# record must match the committed golden exactly
+_TIMING_KEYS = {"t_lower_s", "t_compile_s"}
+
+# How to refresh a stale golden (dryrun skips existing outputs, so delete
+# the file first; the goldens are debug-mesh records — --debug-mesh and
+# the matching _DRYRUN_DEVICES are required or you get a 512-device
+# production-mesh record instead):
+#   rm experiments/dryrun_ci/<arch>__<shape>__<single|multi>.json
+#   _DRYRUN_DEVICES=8 _DRYRUN_XLA_EXTRA= _DRYRUN_HLO_DIR= PYTHONPATH=src \
+#       python -m repro.launch.dryrun --arch <arch> --shape <shape> \
+#       --debug-mesh --out experiments/dryrun_ci
+#   (multi-pod goldens: _DRYRUN_DEVICES=16 and --multi-pod; run in a shell
+#   without JAX_* config vars exported — they change the compiled HLO)
+_REFRESH = ("golden differs from regenerated record; if the change is "
+            "legitimate, refresh per the recipe in tests/test_dryrun_smoke.py "
+            "and inspect the diff")
+
+
 def _run(arch, shape, multi_pod=False, devices="8"):
-    out = os.path.join(REPO, "experiments", "dryrun_ci")
     tag = f"{arch}__{shape}__{'multi' if multi_pod else 'single'}"
-    path = os.path.join(out, tag + ".json")
-    if os.path.exists(path):
-        os.remove(path)
-    env = dict(os.environ, _DRYRUN_DEVICES=devices,
+    # pin the host platform (dryrun.py derives JAX_PLATFORMS from
+    # _DRYRUN_PLATFORM): an inherited tpu/gpu opt-out would make the run
+    # fail off-CPU, bypassing the --xla_force_host_platform_device_count
+    # override
+    # hermetic env: JAX_* config vars (JAX_ENABLE_X64, matmul precision,
+    # ...) and leftover _DRYRUN_XLA_EXTRA/_DRYRUN_HLO_DIR would change the
+    # compiled HLO and spuriously fail the golden comparison
+    env = {k: v for k, v in os.environ.items()
+           if not k.startswith("JAX_") and k != "_DRYRUN_HLO_DIR"}
+    env.update(_DRYRUN_DEVICES=devices, _DRYRUN_PLATFORM="cpu",
+               _DRYRUN_XLA_EXTRA="",
                PYTHONPATH=os.path.join(REPO, "src"))
-    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
-           "--shape", shape, "--debug-mesh", "--out", out]
-    if multi_pod:
-        cmd.append("--multi-pod")
-    r = subprocess.run(cmd, env=env, capture_output=True, text=True,
-                       timeout=540)
-    assert os.path.exists(path), r.stdout[-2000:] + r.stderr[-2000:]
-    with open(path) as f:
-        return json.load(f)
+    # write into a scratch dir, NOT experiments/dryrun_ci: a failed run
+    # must never overwrite the committed goldens
+    with tempfile.TemporaryDirectory(prefix="dryrun_smoke_") as out:
+        path = os.path.join(out, tag + ".json")
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--debug-mesh", "--out", out]
+        if multi_pod:
+            cmd.append("--multi-pod")
+        r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                           timeout=540)
+        assert os.path.exists(path), r.stdout[-2000:] + r.stderr[-2000:]
+        with open(path) as f:
+            rec = json.load(f)
+    golden_path = os.path.join(REPO, "experiments", "dryrun_ci",
+                               tag + ".json")
+    # freshness: every smoke combo has a committed golden and it must
+    # match what the code produces (a missing golden is itself a failure)
+    assert os.path.exists(golden_path), f"golden missing: {golden_path}"
+    with open(golden_path) as f:
+        golden = json.load(f)
+    # status first: on a real regression (status="error") surface the
+    # subprocess error, not a misleading refresh-the-golden message
+    assert rec["status"] == golden["status"], rec.get("error", rec)
+    strip = lambda r: {k: v for k, v in r.items()  # noqa: E731
+                       if k not in _TIMING_KEYS}
+    assert strip(rec) == strip(golden), _REFRESH
+    return rec
 
 
 def test_dense_train_single_pod():
