@@ -4,6 +4,11 @@
 admission, ``static`` seed batch-to-completion, or ``both``); under high
 load the tail of the end-to-end CDF is dominated by queueing delay, which
 continuous batching removes.
+
+``--scenario {coldstart,drift}`` replays the EAMC-lifecycle comparison
+instead: per-phase latency percentiles and hit ratios for offline-oracle vs
+online-learned vs no-EAMC, with the task mix shifting mid-replay in the
+drift scenario.
 """
 from __future__ import annotations
 
@@ -11,7 +16,25 @@ import argparse
 
 import numpy as np
 
-from benchmarks.common import build_engine, emit, run_workload
+from benchmarks.common import (build_engine, emit, run_lifecycle_scenario,
+                               run_workload)
+
+
+def run_scenario(scenario, quick=True, arch="switch-large-128", **kw):
+    n = 16 if quick else 50
+    results = run_lifecycle_scenario(scenario, arch_id=arch,
+                                     n_per_phase=n, **kw)
+    for variant, phases in results.items():
+        for pi, ph in enumerate(phases):
+            tag = f"lifecycle-cdf/{scenario}/{variant}/phase{pi}"
+            lat = ph["lat"] * 1000
+            for p in (50, 90, 99):
+                emit(f"{tag}/p{p}", round(float(np.percentile(lat, p)), 2),
+                     "ms/token")
+            emit(f"{tag}/hit", round(ph["hit"], 3), "ratio",
+                 f"demand={ph['demand']} "
+                 f"eamc={ph['eamc_entries']} "
+                 f"recon={ph['eamc_reconstructions']}")
 
 
 def main(quick=True, scheduling="continuous", policy="prefill",
@@ -56,9 +79,27 @@ if __name__ == "__main__":
     ap.add_argument("--dram-cache", type=int, default=None,
                     help="host-DRAM cache slots; below the expert-set size "
                          "this opens the experts ≫ host DRAM regime")
+    ap.add_argument("--scenario", default=None,
+                    choices=["coldstart", "drift"],
+                    help="EAMC-lifecycle replay instead of the load CDFs")
     args = ap.parse_args()
-    if not args.full:
-        print("# quick mode (30 requests); pass --full for the "
-              "paper-scale Fig 5 CDFs")
-    main(quick=not args.full, scheduling=args.scheduling, policy=args.policy,
-         arch=args.arch, ssd_gbps=args.ssd_gbps, dram_cache=args.dram_cache)
+    if args.scenario:
+        if not args.full:
+            print(f"# quick {args.scenario} scenario (16 reqs/phase); pass "
+                  "--full for 50/phase")
+        kw = {}
+        if args.ssd_gbps is not None:
+            kw["ssd_gbps"] = args.ssd_gbps
+        if args.dram_cache is not None:
+            kw["dram_slots"] = args.dram_cache
+        if args.scheduling != "both":
+            kw["scheduling"] = args.scheduling
+        run_scenario(args.scenario, quick=not args.full, arch=args.arch,
+                     policy=args.policy, **kw)
+    else:
+        if not args.full:
+            print("# quick mode (30 requests); pass --full for the "
+                  "paper-scale Fig 5 CDFs")
+        main(quick=not args.full, scheduling=args.scheduling,
+             policy=args.policy, arch=args.arch, ssd_gbps=args.ssd_gbps,
+             dram_cache=args.dram_cache)

@@ -13,6 +13,11 @@ batch).
 cold-expert union against the live GPU cache exceeds the budget; the
 DESIGN.md §1 fix for expert-transfer-bound regimes like nllb-moe-128 at
 >=2 rps where plain continuous batching loses end-to-end to static).
+
+``--scenario {coldstart,drift}`` switches to the EAMC-lifecycle replay:
+two request waves on one engine (cold start repeats the task mix, drift
+shifts to a disjoint mix mid-replay), comparing offline-oracle vs
+online-learned vs no-EAMC with per-phase hit ratio and per-token latency.
 """
 from __future__ import annotations
 
@@ -20,11 +25,37 @@ import argparse
 
 import numpy as np
 
-from benchmarks.common import build_engine, emit, mean_e2e, run_workload
+from benchmarks.common import (build_engine, emit, mean_e2e,
+                               run_lifecycle_scenario, run_workload)
 
 MODELS = ["switch-base-128", "switch-base-256", "switch-large-128",
           "nllb-moe-128"]
 SYSTEMS = ["moe-infinity", "pytorch-um", "zero-style"]
+
+
+def run_scenario(scenario, quick=True, arch_id="switch-base-128", **kw):
+    """Cold-start / drift lifecycle replay (DESIGN.md §4)."""
+    n = 16 if quick else 40
+    results = run_lifecycle_scenario(scenario, arch_id=arch_id,
+                                     n_per_phase=n, **kw)
+    for variant, phases in results.items():
+        for pi, ph in enumerate(phases):
+            tag = f"lifecycle/{scenario}/{variant}/phase{pi}"
+            emit(f"{tag}/hit", round(ph["hit"], 3), "ratio")
+            emit(f"{tag}/tok-lat", round(float(ph["lat"].mean()) * 1000, 2),
+                 "ms/token", f"demand={ph['demand']}")
+        emit(f"lifecycle/{scenario}/{variant}/eamc",
+             phases[-1]["eamc_entries"], "entries",
+             f"recon={phases[-1]['eamc_reconstructions']}")
+    # the lifecycle claims: online converges to the oracle-peek upper bound
+    # (second-phase latency gap) and beats serving without predictions
+    on = float(results["online"][-1]["lat"].mean())
+    off = float(results["offline-oracle"][-1]["lat"].mean())
+    none = float(results["no-eamc"][-1]["lat"].mean())
+    emit(f"lifecycle/{scenario}/online-vs-offline-last-phase",
+         round(on / off, 3), "x", "<=1.10 = converged")
+    emit(f"lifecycle/{scenario}/online-vs-no-eamc-last-phase",
+         round(on / none, 3), "x", "<1 = prediction pays")
 
 
 def main(quick=True, scheduling="continuous", policy="prefill",
@@ -88,9 +119,29 @@ if __name__ == "__main__":
     ap.add_argument("--dram-cache", type=int, default=None,
                     help="host-DRAM cache slots (default: 2/3 of experts); "
                          "smaller values push experts to the SSD tier")
+    ap.add_argument("--scenario", default=None,
+                    choices=["coldstart", "drift"],
+                    help="EAMC-lifecycle replay instead of the rps sweep: "
+                         "two phases on one engine, offline-oracle vs "
+                         "online-learned vs no-EAMC")
     args = ap.parse_args()
-    if not args.full:
-        print("# quick mode (2 models x 2 rates); pass --full for the "
-              "paper-scale Fig 4 sweep")
-    main(quick=not args.full, scheduling=args.scheduling, policy=args.policy,
-         ssd_gbps=args.ssd_gbps, dram_cache=args.dram_cache)
+    if args.scenario:
+        if not args.full:
+            print(f"# quick {args.scenario} scenario (16 reqs/phase); pass "
+                  "--full for 40/phase")
+        kw = {}
+        if args.ssd_gbps is not None:
+            kw["ssd_gbps"] = args.ssd_gbps
+        if args.dram_cache is not None:
+            kw["dram_slots"] = args.dram_cache
+        if args.scheduling != "both":
+            kw["scheduling"] = args.scheduling
+        run_scenario(args.scenario, quick=not args.full,
+                     policy=args.policy, **kw)
+    else:
+        if not args.full:
+            print("# quick mode (2 models x 2 rates); pass --full for the "
+                  "paper-scale Fig 4 sweep")
+        main(quick=not args.full, scheduling=args.scheduling,
+             policy=args.policy, ssd_gbps=args.ssd_gbps,
+             dram_cache=args.dram_cache)

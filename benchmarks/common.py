@@ -31,12 +31,17 @@ def build_oracle(arch, n_tasks=N_TASKS, seed=7, concentration=0.05):
 
 
 def build_eamc(arch, oracle, capacity=32, n_seqs=60, seed=1,
-               prompt_tokens=16, iters=24):
+               prompt_tokens=16, iters=24, tasks=None):
+    """Offline EAMC construction by peeking at the routing oracle before
+    serving. This is the *optimistic* baseline the online lifecycle removes:
+    a deployed system cannot run its serving distribution through the model
+    ahead of time. ``tasks`` restricts the peek to a task subset (the
+    drift scenario builds "yesterday's" collection this way)."""
     rng = np.random.default_rng(seed)
     L, E = oracle.n_layers, oracle.n_experts
     eams = []
     for i in range(n_seqs):
-        task = i % oracle.dist.shape[0]
+        task = tasks[i % len(tasks)] if tasks else i % oracle.dist.shape[0]
         eam = np.zeros((L, E))
         for it in range(iters):
             eam += oracle.route_tokens(task, prompt_tokens if it == 0 else 1,
@@ -62,10 +67,33 @@ def build_engine(arch_id="switch-base-128", system="moe-infinity", *,
                  hw=None, max_batch=16, seed=0, topk_all=True,
                  scheduling="continuous", policy="prefill",
                  keep_request_eams=False, ssd_gbps=None, ssd_iops=None,
-                 tier_aware=True):
+                 tier_aware=True, eamc_mode="offline", eamc_path=None,
+                 eamc_capacity=32, eamc_tasks=None):
+    """``eamc_mode`` selects the EAMC lifecycle (DESIGN.md §4):
+
+    * ``"offline"`` — oracle-peek construction before serving (the seed-era
+      default; quietly optimistic, kept as the upper-bound baseline).
+    * ``"online"``  — cold start: the collection begins empty and learns
+      from the engine's own completed sequences (insert-or-merge + drift
+      reconstruction).
+    * ``"path"``    — warm restart from ``eamc_path`` (a ``.npz`` persisted
+      by a previous run); online learning stays on.
+
+    An explicitly passed ``eamc`` wins over ``eamc_mode`` construction but
+    still honours the mode's online flag.
+    """
     arch = get_config(arch_id)
     oracle = oracle or build_oracle(arch)
-    eamc = eamc if eamc is not None else build_eamc(arch, oracle)
+    if eamc is None:
+        if eamc_mode == "offline":
+            eamc = build_eamc(arch, oracle, capacity=eamc_capacity,
+                              tasks=eamc_tasks)
+        elif eamc_mode == "online":
+            eamc = EAMC(capacity=eamc_capacity)
+        elif eamc_mode == "path":
+            eamc = EAMC.load(eamc_path)
+        else:
+            raise ValueError(f"unknown eamc_mode {eamc_mode!r}")
     E, L = arch.moe.n_experts, n_moe_layers(arch)
     total = E * L
     gpu_slots = gpu_slots if gpu_slots is not None else total // 5
@@ -97,7 +125,8 @@ def build_engine(arch_id="switch-base-128", system="moe-infinity", *,
                        scheduling=scheduling,
                        keep_request_eams=keep_request_eams,
                        demand_overhead_s=demand_overhead,
-                       tier_aware=tier_aware)
+                       tier_aware=tier_aware,
+                       eamc_online=eamc_mode in ("online", "path"))
     prefetcher = None
     if prefetch == "topk":
         from repro.core.prefetch import TopKPrefetcher
@@ -115,6 +144,98 @@ def run_workload(engine, n_requests=40, rps=2.0, seed=3,
                                               seed=seed + 1))
     engine.run(reqs)
     return reqs
+
+
+def run_phased_workload(engine, phase_tasks, *, n_per_phase=20, rps=2.0,
+                        seed=3, prompt_len=(24, 64), output_len=(8, 24)):
+    """Replay one request wave per entry of ``phase_tasks`` (each a list of
+    task ids) back-to-back on ONE engine, so cache/EAMC state carries across
+    the phase boundary — the cold-start and drift scenarios. Arrivals of
+    each phase are offset to the engine's current virtual clock to keep the
+    offered load at ``rps`` throughout. Returns one dict per phase with the
+    phase-local GPU hit ratio, per-token latency array, demand-fetch count,
+    and the EAMC lifecycle counters at phase end."""
+    n_tasks = max(t for tasks in phase_tasks for t in tasks) + 1
+    out = []
+    for pi, tasks in enumerate(phase_tasks):
+        reqs = make_dataset(WorkloadConfig(prompt_len=prompt_len,
+                                           output_len=output_len,
+                                           n_tasks=n_tasks),
+                            n_per_phase, seed=seed + pi, tasks=list(tasks))
+        for j, r in enumerate(reqs):       # unique rids across phases
+            r.rid = pi * n_per_phase + j
+        arr = azure_like_arrivals(n_per_phase, rps=rps, seed=seed + 10 + pi)
+        attach_arrivals(reqs, arr + engine.offload.sim.clock)
+        gpu = engine.offload.gpu_cache
+        h0, m0 = gpu.hits, gpu.misses
+        d0 = engine.offload.sim.demand_fetches
+        n0 = len(engine.token_latencies)
+        engine.run(reqs)
+        dh, dm = gpu.hits - h0, gpu.misses - m0
+        stats = engine.stats()
+        out.append({
+            "hit": dh / max(1, dh + dm),
+            "lat": np.array(engine.token_latencies[n0:]),
+            "demand": engine.offload.sim.demand_fetches - d0,
+            "eamc_entries": stats["eamc_entries"],
+            "eamc_reconstructions": stats["eamc_reconstructions"],
+        })
+    return out
+
+
+# the lifecycle comparison variants of the cold-start/drift scenarios:
+# offline-oracle (the optimistic pre-serving peek), online (cold start +
+# learning), and no-EAMC (same activation-aware cache, no prediction)
+LIFECYCLE_VARIANTS = ("offline-oracle", "online", "no-eamc")
+
+
+def build_scenario_engine(variant, arch_id="switch-base-128", *,
+                          oracle, known_tasks=None, eamc_capacity=24, **kw):
+    """Engine for one lifecycle variant. ``known_tasks`` restricts the
+    offline-oracle peek to the pre-drift task subset (what "yesterday's"
+    traces could have contained)."""
+    if variant == "offline-oracle":
+        return build_engine(arch_id, "moe-infinity", oracle=oracle,
+                            eamc_capacity=eamc_capacity,
+                            eamc_tasks=known_tasks, **kw)
+    if variant == "online":
+        return build_engine(arch_id, "moe-infinity", oracle=oracle,
+                            eamc_mode="online",
+                            eamc_capacity=eamc_capacity, **kw)
+    if variant == "no-eamc":
+        return build_engine(arch_id, "cache-only", oracle=oracle,
+                            eamc=EAMC(capacity=1), **kw)
+    raise ValueError(variant)
+
+
+def scenario_phases(scenario, n_tasks=6):
+    """Task mixes per phase: cold start repeats one mix, drift shifts to a
+    disjoint mix mid-replay."""
+    old = list(range(n_tasks // 2))
+    new = list(range(n_tasks // 2, n_tasks))
+    return [old, old] if scenario == "coldstart" else [old, new]
+
+
+def run_lifecycle_scenario(scenario, *, arch_id="switch-base-128",
+                           n_per_phase=16, rps=1.0, dram_slots=150,
+                           ssd_gbps=3.5, **engine_kw):
+    """Run the coldstart/drift replay for every lifecycle variant and
+    return ``{variant: [phase dicts]}`` (see ``run_phased_workload``).
+    Defaults to the experts-≫-DRAM regime (NVMe 3.5 GB/s, DRAM 150 slots)
+    where prediction quality moves per-token latency, not just hit ratio;
+    both benchmark front-ends emit from this one implementation."""
+    phases = scenario_phases(scenario)
+    results = {}
+    for variant in LIFECYCLE_VARIANTS:
+        oracle = build_oracle(get_config(arch_id), n_tasks=6)
+        eng = build_scenario_engine(variant, arch_id, oracle=oracle,
+                                    known_tasks=phases[0],
+                                    dram_slots=dram_slots,
+                                    ssd_gbps=ssd_gbps, **engine_kw)
+        results[variant] = run_phased_workload(eng, phases,
+                                               n_per_phase=n_per_phase,
+                                               rps=rps)
+    return results
 
 
 def mean_e2e(reqs):

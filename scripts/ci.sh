@@ -22,6 +22,35 @@ if [ -n "${SMOKE:-}" ]; then
     echo "ci.sh: SMOKE tier — three-tier SSD→DRAM→GPU pipeline (NVMe 3.5 GB/s)"
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout "${SMOKE_TIMEOUT:-300}" \
         python -m repro.launch.serve --reduced --requests 4 --ssd-gbps 3.5
+    echo "ci.sh: SMOKE tier — online EAMC cold start + save/load warm restart"
+    EAMC_TMP=$(mktemp -d)
+    trap 'rm -rf "$EAMC_TMP"' EXIT
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout "${SMOKE_TIMEOUT:-300}" \
+        python -m repro.launch.serve --reduced --requests 4 --eamc-online \
+        --eamc-path "$EAMC_TMP/eamc" | tee "$EAMC_TMP/run1.log"
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout "${SMOKE_TIMEOUT:-300}" \
+        python -m repro.launch.serve --reduced --requests 4 --eamc-online \
+        --eamc-path "$EAMC_TMP/eamc" | tee "$EAMC_TMP/run2.log"
+    python - "$EAMC_TMP/run1.log" "$EAMC_TMP/run2.log" <<'PY'
+import re, sys
+
+def parse(p):
+    s = open(p).read()
+    ent = int(re.search(r"eamc: source=\w+ entries=(\d+)", s).group(1))
+    hit = float(re.search(r"hit=([0-9.]+)", s).group(1))
+    src = re.search(r"eamc: source=(\w+)", s).group(1)
+    return src, ent, hit
+
+s1, e1, h1 = parse(sys.argv[1])
+s2, e2, h2 = parse(sys.argv[2])
+assert s1 == "cold" and s2 == "load", f"lifecycle sources wrong: {s1}/{s2}"
+assert e1 > 0, "cold-start run learned no EAMC entries"
+assert e2 > 0, "warm restart lost the persisted entries"
+assert h2 + 1e-9 >= h1, f"warm-restart hit ratio regressed: {h2} < {h1}"
+print(f"ci.sh: eamc lifecycle OK (entries {e1}->{e2}, hit {h1:.3f}->{h2:.3f})")
+PY
+    rm -rf "$EAMC_TMP"
+    trap - EXIT
 fi
 
 # Tier-1 must be fully green: no allowed-failure list. The 6 seed-era

@@ -30,6 +30,8 @@ class CachePolicy:
         pass
 
     def victim(self, cached: List[Key], protected=frozenset()) -> Key:
+        """Pick the replacement victim; ``None`` when ``cached`` is empty
+        (a zero-capacity tier has nothing to evict)."""
         raise NotImplementedError
 
 
@@ -64,6 +66,8 @@ class ActivationAwareCache(CachePolicy):
         return out
 
     def victim(self, cached: List[Key], protected=frozenset()) -> Key:
+        if not cached:
+            return None
         s = self.scores(cached)
         order = np.argsort(s, kind="stable")
         for i in order:
@@ -95,6 +99,8 @@ class LRUCache(CachePolicy):
         self.last.pop(key, None)
 
     def victim(self, cached, protected=frozenset()):
+        if not cached:
+            return None
         best = None
         for k in cached:
             if k in protected:
@@ -123,6 +129,8 @@ class LFUCache(CachePolicy):
         self.freq.pop(key, None)  # counter reset
 
     def victim(self, cached, protected=frozenset()):
+        if not cached:
+            return None
         best = None
         for k in cached:
             if k in protected:
@@ -191,6 +199,8 @@ class NeighborAwareCache(LRUCache):
         self._touch(key, now)
 
     def victim(self, cached, protected=frozenset()):
+        if not cached:
+            return None
         layer_last = self.layer_last
         best, best_t = None, None
         for k in cached:
@@ -227,6 +237,8 @@ class OracleCache(CachePolicy):
         return 1 << 60
 
     def victim(self, cached, protected=frozenset()):
+        if not cached:
+            return None
         best, best_u = None, -1
         for k in cached:
             if k in protected:
@@ -261,8 +273,9 @@ class ExpertCache:
 
     def insert(self, key: Key, now: float = 0.0,
                protected=frozenset()) -> Optional[Key]:
-        """Insert ``key``; returns the evicted victim (if any)."""
-        if key in self._set:
+        """Insert ``key``; returns the evicted victim (if any). A
+        zero-capacity cache (ablated tier) rejects the insert outright."""
+        if self.capacity <= 0 or key in self._set:
             return None
         evicted = None
         if len(self.resident) >= self.capacity:

@@ -49,6 +49,15 @@ class OffloadConfig:
     # no-op when the SSD hop is free, so False only exists for the
     # bit-invariance tests and ablations.
     tier_aware: bool = True
+    # online EAMC lifecycle (§4.3 / DESIGN.md §4): learn every completed
+    # sequence's EAM into the collection (capacity-bounded insert-or-merge)
+    # and rebuild it in the background when the drift EWMA over match
+    # distances degrades past the threshold. With good match distances the
+    # trigger never fires, so an armed trigger is bit-identical to a
+    # disarmed one on a stable workload.
+    eamc_online: bool = False
+    eamc_drift_threshold: float = 0.6    # EWMA Eq.(1) distance ⇒ drift
+    eamc_drift_min_seqs: int = 8         # warmup + min gap between rebuilds
 
 
 class OffloadEngine:
@@ -104,6 +113,7 @@ class OffloadEngine:
         self.prefetcher.tier_weight = (self.sim.tier_weight
                                        if cfg.tier_aware else None)
         self._protected: frozenset = frozenset()
+        self._seqs_since_reconstruct = 0
         self.warm_start()
 
         # stats
@@ -124,9 +134,29 @@ class OffloadEngine:
             self.dram_cache.insert(k)
             self.sim.in_dram.add(k)
 
+    # -- zero-capacity DRAM tier (GPU↔SSD ablation) ---------------------------
+    # With ``dram_cache_experts=0`` the DRAM level still exists in the
+    # simulator as the staging hop of the SSD→DRAM→GPU pipeline, but
+    # nothing may *live* there: any path that would normally hand a key to
+    # the DRAM cache must instead release the transient staging image as
+    # soon as its GPU leg completes (or is vetoed), or ``sim.in_dram``
+    # residency leaks and misses stop paying the NVMe hop. Every such path
+    # funnels through these two helpers — keep it that way.
+    def _dram_is_staging_only(self) -> bool:
+        return self.dram_cache.capacity <= 0
+
+    def _release_staging(self, key: Key) -> None:
+        self.sim.evict(key, DRAM)
+
     # -- prefetch admission (§6.2: replacement decided before the copy) ------
     def _admit(self, key: Key, tier: str, priority: float) -> bool:
         cache = self.gpu_cache if tier == GPU else self.dram_cache
+        if cache.capacity <= 0:
+            # ablated tier: veto the copy; if the expert was staged through
+            # the transient DRAM buffer for this hop, release that image
+            if tier == GPU and self._dram_is_staging_only():
+                self._release_staging(key)
+            return False
         if len(cache.resident) < cache.capacity or key in cache._set:
             return True
         victim = cache.policy.victim(cache.resident, self._protected)
@@ -139,19 +169,39 @@ class OffloadEngine:
             # unconditionally like the LRU family it extends (its victim
             # is the least-recently-used activation-cold expert)
             return True
-        return priority > vscore
+        ok = priority > vscore
+        if not ok and tier == GPU and self._dram_is_staging_only():
+            # vetoed GPU copy with no DRAM tier: the staging image that
+            # carried it across the SSD hop has no cache to live in
+            self._release_staging(key)
+        return ok
 
     # -- cache replacement on arrival (Alg. 2 trigger) -----------------------
     def _on_arrive(self, key: Key, tier: str, now: float) -> None:
         if tier == GPU:
+            if self._dram_is_staging_only():
+                # the DRAM image was only the pipeline staging buffer —
+                # release it on GPU arrival
+                self._release_staging(key)
             evicted = self.gpu_cache.insert(key, now, self._protected)
             if evicted is not None:
                 self.sim.evict(evicted, GPU)
                 self._demote(evicted, now)
         else:
+            if self._dram_is_staging_only():
+                # keep the staging image only while a GPU leg is still
+                # pending on it
+                if key not in self.sim._gpu_pending_priority:
+                    self._release_staging(key)
+                return
             evicted = self.dram_cache.insert(key, now, self._protected)
             if evicted is not None:
                 self.sim.evict(evicted, DRAM)
+
+    def _dram_access(self, key: Key) -> None:
+        """Post-demand-fetch DRAM-tier recency touch (no-op when ablated)."""
+        if not self._dram_is_staging_only():
+            self.dram_cache.access(key, self.sim.clock)
 
     def _demote(self, key: Key, now: float) -> None:
         """A GPU-evicted expert falls back to the DRAM tier (no copy is
@@ -161,6 +211,8 @@ class OffloadEngine:
         victim's; the default reuse-aware DRAM tier and the baselines
         demote unconditionally (LRU semantics: the GPU-evicted expert was
         recently used on-device, so it displaces the LRU cold resident)."""
+        if self._dram_is_staging_only():
+            return  # no DRAM tier: the evicted expert is SSD-resident again
         if key in self.dram_cache:
             self.sim.in_dram.add(key)
             return
@@ -215,6 +267,7 @@ class OffloadEngine:
         self.prefetcher.observe(ctx)
         if record_drift:
             self.eamc.record_for_reconstruction(eam)
+        self._eamc_lifecycle(eam)
         if not self.seq_ctxs:
             # engine idle: the inference procedure is over — drop its
             # prefetch queue (Algorithm 1's ``q`` is procedure-scoped) and
@@ -222,6 +275,40 @@ class OffloadEngine:
             self.ctx.reset()
             self.sim.clear_queues()
         return eam
+
+    # -- online EAMC lifecycle (§4.3 / DESIGN.md §4) ---------------------------
+    def _eamc_lifecycle(self, eam: np.ndarray) -> None:
+        """Per-completed-sequence lifecycle step: record the sequence's final
+        match distance (drift telemetry), learn the EAM into the collection
+        (online mode), and run a bounded background reconstruction when the
+        drift EWMA says match quality has degraded. Runs at the sequence
+        boundary — nothing here touches the per-layer hot path."""
+        if eam.sum() <= 0:
+            return  # a sequence that never routed a token carries no signal
+        pf = self.prefetcher
+        aware = isinstance(pf, ActivationAwarePrefetcher)
+        nearest, dist = None, None
+        if self.eamc.entries and (aware or self.cfg.eamc_online):
+            nearest, dist = self.eamc.lookup(eam)
+            if aware:
+                pf.note_distance(dist)
+        if not self.cfg.eamc_online:
+            return
+        verdict = self.eamc.online_update(eam, nearest=nearest, dist=dist)
+        self._seqs_since_reconstruct += 1
+        if verdict == "insert" and aware:
+            # the collection grew: the novel pattern is now represented, so
+            # distances measured before the insert (the cold-start warmup
+            # state) must not count as drift evidence
+            pf.reset_drift_signal()
+            return
+        if (aware
+                and self._seqs_since_reconstruct >= self.cfg.eamc_drift_min_seqs
+                and pf.ewma_n >= self.cfg.eamc_drift_min_seqs
+                and pf.ewma_distance > self.cfg.eamc_drift_threshold):
+            self.eamc.reconstruct()
+            self._seqs_since_reconstruct = 0
+            pf.reset_drift_signal()
 
     # -- the per-layer hot path (Algorithm 1) -----------------------------------
     def on_layer(self, layer_idx: int, token_counts: np.ndarray,
@@ -285,7 +372,7 @@ class OffloadEngine:
                 self.sim.submit_prefetch(key, 1e30)
         for key in missing:
             stall += self.sim.demand_fetch(key)
-            self.dram_cache.access(key, self.sim.clock)
+            self._dram_access(key)
         self._protected = frozenset()
 
         # step 13: experts execute
@@ -296,7 +383,16 @@ class OffloadEngine:
     # -- metrics ------------------------------------------------------------------
     def stats(self) -> dict:
         sim = self.sim
+        pf = self.prefetcher
+        mean_dist = (pf.mean_match_distance
+                     if isinstance(pf, ActivationAwarePrefetcher)
+                     else float("nan"))
         return {
+            "eamc_entries": len(self.eamc.entries),
+            "eamc_online_inserts": self.eamc.n_online_inserts,
+            "eamc_online_merges": self.eamc.n_online_merges,
+            "eamc_reconstructions": self.eamc.n_reconstructions,
+            "eamc_mean_match_distance": mean_dist,
             "gpu_hit_ratio": self.gpu_cache.hit_ratio,
             "dram_hit_ratio": self.dram_cache.hit_ratio,
             "demand_fetches": sim.demand_fetches,

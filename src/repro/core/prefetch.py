@@ -91,9 +91,47 @@ class ActivationAwarePrefetcher(Prefetcher):
         self.include_zero_ratio = include_zero_ratio
         self._oneshot_plan: Optional[list] = None
         self.last_distance = float("nan")
+        self.last_match_ratios: Optional[np.ndarray] = None
+        # drift telemetry (§4.3): EWMA + running mean over *sequence-final*
+        # match distances, fed by the offload engine at finish_seq. The EWMA
+        # is the reconstruction trigger; sequence-final distances are used
+        # because early-layer lookups carry a constant offset from the
+        # still-unobserved layers (see eam_distance) that would swamp it.
+        self.ewma_alpha = 0.25
+        self.ewma_distance = float("nan")
+        self.ewma_n = 0            # samples since the last drift reset
+        self.distance_sum = 0.0
+        self.distance_n = 0
 
     def start_sequence(self) -> None:
         self._oneshot_plan = None
+        # a fresh inference procedure must not inherit the previous
+        # procedure's predicted ratios into Alg-2 cache scoring
+        self.last_match_ratios = None
+
+    def note_distance(self, d: float) -> None:
+        """Record one completed sequence's final match distance."""
+        if not np.isfinite(d):
+            return
+        self.distance_sum += d
+        self.distance_n += 1
+        self.ewma_n += 1
+        a = self.ewma_alpha
+        self.ewma_distance = (d if np.isnan(self.ewma_distance)
+                              else (1 - a) * self.ewma_distance + a * d)
+
+    def reset_drift_signal(self) -> None:
+        """Called when the collection changes shape (an online insert or a
+        reconstruction): distances measured against the previous collection
+        no longer describe the current one, so match quality is re-measured
+        fresh instead of averaging across the boundary."""
+        self.ewma_distance = float("nan")
+        self.ewma_n = 0
+
+    @property
+    def mean_match_distance(self) -> float:
+        return (self.distance_sum / self.distance_n if self.distance_n
+                else float("nan"))
 
     def plan(self, ctx: SequenceContext, cur_layer: int):
         if not self.refine and self._oneshot_plan is not None:
@@ -102,6 +140,10 @@ class ActivationAwarePrefetcher(Prefetcher):
         p_eam, d = self.eamc.lookup(ctx.cur_eam)            # steps 16-21
         self.last_distance = d
         if p_eam is None:
+            # empty/young EAMC (the online cold-start state): there is no
+            # prediction — clearing here keeps a stale previous match from
+            # leaking into pred_merged / cache scores
+            self.last_match_ratios = None
             return []
         sums = p_eam.sum(axis=1, keepdims=True)
         self.last_match_ratios = np.divide(

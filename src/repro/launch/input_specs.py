@@ -14,7 +14,7 @@ from repro.launch.sharding import cache_shardings
 from repro.models import Model
 
 # archs that may run the 524k decode shape (sub-quadratic decode state);
-# gemma2 runs it in the windowed variant (DESIGN.md §4)
+# gemma2 runs it in the windowed variant (DESIGN.md §5)
 LONG_CONTEXT_OK = {"rwkv6-7b", "jamba-1.5-large-398b", "gemma2-2b"}
 
 
@@ -31,7 +31,7 @@ def supports_shape(cfg: ArchConfig, shape: InputShape) -> bool:
 def skip_reason(cfg: ArchConfig, shape: InputShape) -> str:
     if shape.name == "long_500k" and cfg.name not in LONG_CONTEXT_OK:
         return ("full-attention KV at 524k is quadratic-cost prefill / "
-                "unbounded KV decode; skipped per DESIGN.md §4")
+                "unbounded KV decode; skipped per DESIGN.md §5")
     return ""
 
 

@@ -10,18 +10,26 @@ prefill-priority, decode-priority, or stall-aware admission) and recycles
 batch slots on completion — no lockstep batching, no recompiles after
 warmup.
 
+The EAMC can be built three ways (DESIGN.md §4): offline from a warmup
+dataset pass (the default), cold-start empty with online learning
+(``--eamc-online``), or warm-restarted from a previous run's persisted
+collection (``--eamc-path``; the file is rewritten at exit, so back-to-back
+invocations keep learning across restarts).
+
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-moe-235b-a22b \
-        --reduced --requests 8
+        --reduced --requests 8 --eamc-online --eamc-path /tmp/eamc
 """
 from __future__ import annotations
 
 import argparse
+import os
 from dataclasses import replace
 
 import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.eam import EAMC
 from repro.core.memsim import PAPER_8GPU
 from repro.core.tracer import build_eamc
 from repro.models import Model
@@ -61,6 +69,13 @@ def main(argv=None):
                     help="NVMe read IOPS: each SSD read pays 1/iops s "
                          "setup on top of the bandwidth term (0 = ideal)")
     ap.add_argument("--eamc-capacity", type=int, default=8)
+    ap.add_argument("--eamc-online", action="store_true",
+                    help="learn the EAMC from served traffic instead of the "
+                         "offline warmup pass; without --eamc-path the "
+                         "collection starts empty (cold start)")
+    ap.add_argument("--eamc-path", default=None,
+                    help="persisted EAMC (.npz): loaded at startup when the "
+                         "file exists (warm restart) and rewritten at exit")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -69,7 +84,7 @@ def main(argv=None):
         cfg = cfg.reduced()
     if cfg.moe is None:
         raise SystemExit(f"{args.arch} has no routed MoE; expert offloading "
-                         "degenerates to layer streaming (see DESIGN.md §4). "
+                         "degenerates to layer streaming (see DESIGN.md §5). "
                          "Pick an MoE arch for this launcher.")
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -82,7 +97,18 @@ def main(argv=None):
         return np.asarray(fwd(params, {"tokens": seq[None]}))[:, 0, :]
 
     dataset = [b["tokens"][0] for b in data.batches(max(10, args.requests))]
-    eamc = build_eamc(run_fn, dataset, capacity=args.eamc_capacity)
+    eamc_source = "offline"
+    if args.eamc_path and os.path.exists(EAMC._resolve_path(args.eamc_path)):
+        eamc = EAMC.load(args.eamc_path)
+        eamc.capacity = max(eamc.capacity, args.eamc_capacity)
+        eamc_source = "load"
+    elif args.eamc_online:
+        # cold start: no oracle-peek warmup pass — the engine learns the
+        # collection from its own traffic
+        eamc = EAMC(capacity=args.eamc_capacity)
+        eamc_source = "cold"
+    else:
+        eamc = build_eamc(run_fn, dataset, capacity=args.eamc_capacity)
 
     hw = PAPER_8GPU
     if args.ssd_gbps is not None or args.ssd_iops:
@@ -95,7 +121,8 @@ def main(argv=None):
                      dram_cache_experts=args.dram_cache, hw=hw,
                      scheduler=SchedulerConfig(max_batch=args.slots,
                                                policy=args.policy),
-                     keep_request_eams=False),
+                     keep_request_eams=False,
+                     eamc_online=args.eamc_online),
         model, params, eamc=eamc,
         cache_len=args.prompt_len + args.max_new)
 
@@ -137,6 +164,16 @@ def main(argv=None):
           f"(demand {stats['ssd_demand_bytes']/1e6:.1f}), "
           f"miss-cost dram={stats['miss_cost_dram']*1e3:.2f}ms "
           f"ssd={stats['miss_cost_ssd']*1e3:.2f}ms")
+    learned = stats["eamc_online_inserts"] + stats["eamc_online_merges"]
+    print(f"eamc: source={eamc_source} entries={stats['eamc_entries']} "
+          f"learned={learned} "
+          f"(insert={stats['eamc_online_inserts']} "
+          f"merge={stats['eamc_online_merges']}) "
+          f"recon={stats['eamc_reconstructions']} "
+          f"mean-dist={stats['eamc_mean_match_distance']:.3f}")
+    if args.eamc_path:
+        saved = eamc.save(args.eamc_path)
+        print(f"eamc: saved {stats['eamc_entries']} entries -> {saved}")
 
 
 if __name__ == "__main__":

@@ -95,6 +95,11 @@ class EngineConfig:
     n_gpu_links: int = 1             # parallel DRAM→device links
     transfer_bytes_factor: float = 1.0  # <1 = quantized expert transfers
     tier_aware: bool = True          # SSD-tier-aware prefetch priorities
+    # online EAMC lifecycle: learn completed sequences' EAMs into the
+    # collection and reconstruct on drift (DESIGN.md §4)
+    eamc_online: bool = False
+    eamc_drift_threshold: float = 0.6
+    eamc_drift_min_seqs: int = 8
 
 
 class StepEngine:
@@ -126,6 +131,9 @@ class StepEngine:
             n_gpu_links=cfg.n_gpu_links,
             transfer_bytes_factor=cfg.transfer_bytes_factor,
             tier_aware=cfg.tier_aware,
+            eamc_online=cfg.eamc_online,
+            eamc_drift_threshold=cfg.eamc_drift_threshold,
+            eamc_drift_min_seqs=cfg.eamc_drift_min_seqs,
         )
         self.offload = OffloadEngine(ocfg, eamc=eamc, prefetcher=prefetcher,
                                      cache_policy=cache_policy)
@@ -134,7 +142,7 @@ class StepEngine:
                        for i in range(arch.n_layers)}
         self._running: List[Request] = []
         self._expected_keys = None        # stall-admission prior (cached)
-        self._expected_keys_n = -1
+        self._expected_keys_v = None      # (n_entries, eamc.version) key
         self.request_eams: Dict[int, np.ndarray] = {}
         self.token_latencies: List[float] = []
         self.iter_log: List[dict] = []
@@ -291,9 +299,14 @@ class StepEngine:
         return sum(1 for k in keys if k not in gpu)
 
     def _expected_expert_keys(self):
-        entries = self.offload.eamc.entries
+        eamc = self.offload.eamc
+        entries = eamc.entries
+        # keyed on the EAMC version too: online merges rewrite entries
+        # without changing their count, which the old length-only check
+        # would have treated as unchanged
+        ver = (len(entries), getattr(eamc, "version", 0))
         if self._expected_keys is not None \
-                and self._expected_keys_n == len(entries):
+                and self._expected_keys_v == ver:
             return self._expected_keys
         keys: List[tuple] = []
         if entries:
@@ -311,7 +324,7 @@ class StepEngine:
                 take = int(np.searchsorted(cum, 0.8)) + 1
                 keys.extend((li, int(e)) for e in order[:take])
         self._expected_keys = keys
-        self._expected_keys_n = len(entries)
+        self._expected_keys_v = ver
         return keys
 
     # -- metrics ---------------------------------------------------------------
