@@ -16,8 +16,9 @@ import argparse
 
 import numpy as np
 
-from benchmarks.common import (build_engine, emit, run_lifecycle_scenario,
-                               run_workload)
+from benchmarks.common import (build_engine, dump_json, emit,
+                               run_lifecycle_scenario, run_workload,
+                               start_json_capture)
 
 
 def run_scenario(scenario, quick=True, arch="switch-large-128", **kw):
@@ -82,7 +83,13 @@ if __name__ == "__main__":
     ap.add_argument("--scenario", default=None,
                     choices=["coldstart", "drift"],
                     help="EAMC-lifecycle replay instead of the load CDFs")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also dump the emitted rows as a JSON document "
+                         "('-' = stdout); the CI BENCH tier asserts it "
+                         "parses")
     args = ap.parse_args()
+    if args.json:
+        start_json_capture()
     if args.scenario:
         if not args.full:
             print(f"# quick {args.scenario} scenario (16 reqs/phase); pass "
@@ -103,3 +110,5 @@ if __name__ == "__main__":
         main(quick=not args.full, scheduling=args.scheduling,
              policy=args.policy, arch=args.arch, ssd_gbps=args.ssd_gbps,
              dram_cache=args.dram_cache)
+    if args.json:
+        dump_json(args.json)

@@ -25,8 +25,9 @@ import argparse
 
 import numpy as np
 
-from benchmarks.common import (build_engine, emit, mean_e2e,
-                               run_lifecycle_scenario, run_workload)
+from benchmarks.common import (build_engine, dump_json, emit, mean_e2e,
+                               run_lifecycle_scenario, run_workload,
+                               start_json_capture)
 
 MODELS = ["switch-base-128", "switch-base-256", "switch-large-128",
           "nllb-moe-128"]
@@ -56,6 +57,29 @@ def run_scenario(scenario, quick=True, arch_id="switch-base-128", **kw):
          round(on / off, 3), "x", "<=1.10 = converged")
     emit(f"lifecycle/{scenario}/online-vs-no-eamc-last-phase",
          round(on / none, 3), "x", "<1 = prediction pays")
+
+
+def run_rf_sweep(fractions, quick=True, arch_id="switch-base-128",
+                 ssd_gbps=None, dram_cache=None):
+    """Latency response to device expert-slot capacity — the trace-mode
+    mirror of ``serve --resident-fraction`` (GPU cache slots = rf × L·E).
+    The curve this emits is the paper's core claim in one line: per-token
+    latency degrades gracefully, not cliff-like, as the resident fraction
+    shrinks, because the cache holds the activation-hot experts."""
+    rps_list = [0.5, 2.0] if quick else [0.5, 1.0, 2.0, 4.0]
+    n = 24 if quick else 80
+    for rf in fractions:
+        for rps in rps_list:
+            eng = build_engine(arch_id, "moe-infinity",
+                               resident_fraction=rf, ssd_gbps=ssd_gbps,
+                               dram_slots=dram_cache)
+            run_workload(eng, n_requests=n, rps=rps)
+            stats = eng.stats()
+            tag = f"rf-sweep/{arch_id}/rf={rf}/rps={rps}"
+            emit(tag, round(stats["mean_token_latency"] * 1000, 2),
+                 "ms/token",
+                 f"hit={stats['gpu_hit_ratio']:.3f} "
+                 f"demand={stats['demand_fetches']}")
 
 
 def main(quick=True, scheduling="continuous", policy="prefill",
@@ -124,8 +148,25 @@ if __name__ == "__main__":
                     help="EAMC-lifecycle replay instead of the rps sweep: "
                          "two phases on one engine, offline-oracle vs "
                          "online-learned vs no-EAMC")
+    ap.add_argument("--resident-fraction", default=None,
+                    help="comma-separated device expert-slot fractions "
+                         "(e.g. 0.1,0.2,0.5): sweep per-token latency vs "
+                         "resident fraction instead of the Fig-4 matrix")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also dump the emitted rows as a JSON document "
+                         "('-' = stdout); the CI BENCH tier asserts it "
+                         "parses")
     args = ap.parse_args()
-    if args.scenario:
+    if args.json:
+        start_json_capture()
+    if args.resident_fraction:
+        fractions = [float(x) for x in args.resident_fraction.split(",")]
+        if not args.full:
+            print("# quick rf sweep (1 model x 2 rates); pass --full for "
+                  "4 rates")
+        run_rf_sweep(fractions, quick=not args.full,
+                     ssd_gbps=args.ssd_gbps, dram_cache=args.dram_cache)
+    elif args.scenario:
         if not args.full:
             print(f"# quick {args.scenario} scenario (16 reqs/phase); pass "
                   "--full for 40/phase")
@@ -145,3 +186,5 @@ if __name__ == "__main__":
         main(quick=not args.full, scheduling=args.scheduling,
              policy=args.policy, ssd_gbps=args.ssd_gbps,
              dram_cache=args.dram_cache)
+    if args.json:
+        dump_json(args.json)

@@ -2,9 +2,14 @@
 
 All benchmarks run the trace-mode serving engine (real policy code, real
 event simulator, synthetic task-conditioned routing — DESIGN.md §3) and
-print ``name,value,unit,derived`` CSV rows.
+print ``name,value,unit,derived`` CSV rows. With JSON capture enabled
+(``--json`` on the bench front-ends) the same rows are also collected into
+a machine-checkable document — the CI BENCH tier asserts it parses, so
+benches can no longer bitrot silently between PRs.
 """
 from __future__ import annotations
+
+import json
 
 import numpy as np
 
@@ -68,7 +73,7 @@ def build_engine(arch_id="switch-base-128", system="moe-infinity", *,
                  scheduling="continuous", policy="prefill",
                  keep_request_eams=False, ssd_gbps=None, ssd_iops=None,
                  tier_aware=True, eamc_mode="offline", eamc_path=None,
-                 eamc_capacity=32, eamc_tasks=None):
+                 eamc_capacity=32, eamc_tasks=None, resident_fraction=None):
     """``eamc_mode`` selects the EAMC lifecycle (DESIGN.md §4):
 
     * ``"offline"`` — oracle-peek construction before serving (the seed-era
@@ -96,6 +101,12 @@ def build_engine(arch_id="switch-base-128", system="moe-infinity", *,
             raise ValueError(f"unknown eamc_mode {eamc_mode!r}")
     E, L = arch.moe.n_experts, n_moe_layers(arch)
     total = E * L
+    if resident_fraction is not None:
+        # trace-mode mirror of the model-mode slot cache: the GPU cache
+        # capacity is the device expert-slot count, rf × L·E (floor: one
+        # layer's worst-case routed set, like JaxModelServer)
+        gpu_slots = min(total, max(int(round(resident_fraction * total)),
+                                   min(total, E)))
     gpu_slots = gpu_slots if gpu_slots is not None else total // 5
     dram_slots = dram_slots if dram_slots is not None else (2 * total) // 3
     hw = hw or HWConfig()
@@ -244,5 +255,28 @@ def mean_e2e(reqs):
     return float(np.mean([r.latency for r in reqs]))
 
 
+# -- emit + optional JSON capture (CI BENCH tier) ---------------------------
+_JSON_ROWS = None
+
+
+def start_json_capture() -> None:
+    """Collect every subsequent `emit` row for `dump_json`."""
+    global _JSON_ROWS
+    _JSON_ROWS = []
+
+
 def emit(name, value, unit="", derived=""):
+    if _JSON_ROWS is not None:
+        _JSON_ROWS.append({"name": name, "value": value, "unit": unit,
+                           "derived": derived})
     print(f"{name},{value},{unit},{derived}")
+
+
+def dump_json(path=None) -> None:
+    """Write captured rows as a JSON document (``None``/``"-"`` = stdout)."""
+    doc = json.dumps({"rows": _JSON_ROWS or []}, indent=1)
+    if path in (None, "-"):
+        print(doc)
+    else:
+        with open(path, "w") as f:
+            f.write(doc + "\n")

@@ -2,35 +2,107 @@
 # One-shot tier-1 verify: install dev deps (best effort — offline
 # containers keep whatever is baked in) and run the test suite.
 #
-#   scripts/ci.sh            # quick: install + pytest
+#   scripts/ci.sh            # quick: guard + install + pytest
 #   SKIP_INSTALL=1 scripts/ci.sh
 #   SMOKE=1 scripts/ci.sh    # additionally run the real-JAX serving path
 #                            # end to end (slot-pool engine, ragged
-#                            # requests, Poisson arrivals) under a timeout
+#                            # requests, Poisson arrivals, expert slot
+#                            # cache) under a timeout
+#   BENCH=1 scripts/ci.sh    # additionally run one reduced bench_rps and
+#                            # one reduced bench_latency_cdf point and
+#                            # assert they emit valid JSON (bitrot guard)
+#
+# CI_LOG_DIR=<dir>           # tee serve/bench reports there (uploaded as
+#                            # workflow artifacts)
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+LOG_DIR="${CI_LOG_DIR:-}"
+[ -n "$LOG_DIR" ] && mkdir -p "$LOG_DIR"
+
+log_tee() {  # tee stdin to $LOG_DIR/$1 when CI_LOG_DIR is set
+    if [ -n "$LOG_DIR" ]; then tee "$LOG_DIR/$1"; else cat; fi
+}
+
+# Tracked-artifact guard: compiled/binary artifacts must never be
+# committed (PR 4 accidentally shipped 31 __pycache__ binaries).
+if git ls-files | grep -E '\.(pyc|npz)$'; then
+    echo "ci.sh: FAIL — tracked .pyc/.npz artifacts (see list above); " \
+         "git rm them (the root .gitignore keeps them out)" >&2
+    exit 1
+fi
 
 if [ -z "${SKIP_INSTALL:-}" ]; then
     python -m pip install -q -r requirements-dev.txt || \
         echo "ci.sh: pip install failed (offline?); running with baked-in deps"
 fi
 
+# Single EXIT-trap cleanup for every scratch dir any tier allocates: a
+# mid-tier failure (set -e) still removes them, and nothing double-frees.
+TMPDIRS=()
+cleanup() {
+    local d
+    for d in "${TMPDIRS[@]:-}"; do
+        [ -n "$d" ] && rm -rf "$d"
+    done
+}
+trap cleanup EXIT
+scratch() {  # scratch VAR: mktemp -d into $VAR, registered for cleanup
+    local d    # (no command substitution — a subshell would lose TMPDIRS)
+    d=$(mktemp -d)
+    TMPDIRS+=("$d")
+    printf -v "$1" '%s' "$d"
+}
+
 if [ -n "${SMOKE:-}" ]; then
     echo "ci.sh: SMOKE tier — model-mode serve end to end"
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout "${SMOKE_TIMEOUT:-300}" \
-        python -m repro.launch.serve --reduced --requests 4
+        python -m repro.launch.serve --reduced --requests 4 \
+        | log_tee serve_base.log
     echo "ci.sh: SMOKE tier — three-tier SSD→DRAM→GPU pipeline (NVMe 3.5 GB/s)"
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout "${SMOKE_TIMEOUT:-300}" \
-        python -m repro.launch.serve --reduced --requests 4 --ssd-gbps 3.5
+        python -m repro.launch.serve --reduced --requests 4 --ssd-gbps 3.5 \
+        | log_tee serve_ssd.log
+
+    echo "ci.sh: SMOKE tier — expert slot cache (resident-fraction 0.5 vs 1.0)"
+    scratch SLOT_TMP
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout "${SMOKE_TIMEOUT:-300}" \
+        python -m repro.launch.serve --reduced --requests 4 \
+        --resident-fraction 0.5 | tee "$SLOT_TMP/half.log" \
+        | log_tee serve_rf05.log
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout "${SMOKE_TIMEOUT:-300}" \
+        python -m repro.launch.serve --reduced --requests 4 \
+        --resident-fraction 1.0 | tee "$SLOT_TMP/full.log" \
+        | log_tee serve_rf10.log
+    python - "$SLOT_TMP/half.log" "$SLOT_TMP/full.log" <<'PY'
+import re, sys
+
+half, full = open(sys.argv[1]).read(), open(sys.argv[2]).read()
+toks_h = re.findall(r"toks=([\d,]+)", half)
+toks_f = re.findall(r"toks=([\d,]+)", full)
+assert toks_h and toks_h == toks_f, \
+    f"slot-cache token output diverged from all-resident: {toks_h} vs {toks_f}"
+m = re.search(r"slots: resident=(\d+)/(\d+) hit-ratio=[0-9.]+ hits=(\d+) "
+              r"misses=\d+ demand-uploads=(\d+)", half)
+assert m, "no slot-cache report line in the rf=0.5 run"
+res, total, hits, demand = map(int, m.groups())
+assert res < total, f"rf=0.5 kept all {total} experts resident"
+assert hits > 0, "slot cache reported zero hits"
+assert demand > 0, "slot cache reported zero demand uploads"
+print(f"ci.sh: slot cache OK (resident {res}/{total}, hits={hits}, "
+      f"demand-uploads={demand}, tokens bit-identical)")
+PY
+
     echo "ci.sh: SMOKE tier — online EAMC cold start + save/load warm restart"
-    EAMC_TMP=$(mktemp -d)
-    trap 'rm -rf "$EAMC_TMP"' EXIT
+    scratch EAMC_TMP
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout "${SMOKE_TIMEOUT:-300}" \
         python -m repro.launch.serve --reduced --requests 4 --eamc-online \
-        --eamc-path "$EAMC_TMP/eamc" | tee "$EAMC_TMP/run1.log"
+        --eamc-path "$EAMC_TMP/eamc" | tee "$EAMC_TMP/run1.log" \
+        | log_tee serve_eamc_cold.log
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout "${SMOKE_TIMEOUT:-300}" \
         python -m repro.launch.serve --reduced --requests 4 --eamc-online \
-        --eamc-path "$EAMC_TMP/eamc" | tee "$EAMC_TMP/run2.log"
+        --eamc-path "$EAMC_TMP/eamc" | tee "$EAMC_TMP/run2.log" \
+        | log_tee serve_eamc_warm.log
     python - "$EAMC_TMP/run1.log" "$EAMC_TMP/run2.log" <<'PY'
 import re, sys
 
@@ -49,8 +121,29 @@ assert e2 > 0, "warm restart lost the persisted entries"
 assert h2 + 1e-9 >= h1, f"warm-restart hit ratio regressed: {h2} < {h1}"
 print(f"ci.sh: eamc lifecycle OK (entries {e1}->{e2}, hit {h1:.3f}->{h2:.3f})")
 PY
-    rm -rf "$EAMC_TMP"
-    trap - EXIT
+fi
+
+if [ -n "${BENCH:-}" ]; then
+    echo "ci.sh: BENCH tier — reduced bench points must emit valid JSON"
+    scratch BENCH_TMP
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout "${BENCH_TIMEOUT:-600}" \
+        python -m benchmarks.bench_rps --resident-fraction 0.2 \
+        --json "$BENCH_TMP/rps.json" | log_tee bench_rps.log
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout "${BENCH_TIMEOUT:-600}" \
+        python -m benchmarks.bench_latency_cdf --scheduling continuous \
+        --json "$BENCH_TMP/cdf.json" | log_tee bench_latency_cdf.log
+    python - "$BENCH_TMP/rps.json" "$BENCH_TMP/cdf.json" <<'PY'
+import json, sys
+
+for p in sys.argv[1:]:
+    with open(p) as f:
+        doc = json.load(f)
+    rows = doc["rows"]
+    assert rows, f"{p}: bench emitted no rows"
+    for r in rows:
+        assert {"name", "value", "unit", "derived"} <= set(r), f"{p}: {r}"
+    print(f"ci.sh: {p} OK ({len(rows)} rows)")
+PY
 fi
 
 # Tier-1 must be fully green: no allowed-failure list. The 6 seed-era

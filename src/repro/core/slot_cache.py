@@ -1,0 +1,256 @@
+"""Device-resident expert slot cache — the *real* half of the offload stack.
+
+The simulator (`repro.core.memsim`) decides *when* expert movement happens
+and what it costs; this module is where expert weights actually move. A
+:class:`HostExpertStore` pins the full expert parameter set in host memory
+(and strips it out of the device param tree), and an :class:`ExpertSlotCache`
+owns a fixed-shape device buffer of ``n_slots ≪ L×E`` stacked expert triples
+(``w_gate/w_up/w_down`` per slot) plus the ``(L, E) → slot`` table the
+model's slot-indexed dispatch gathers through
+(:func:`repro.models.moe.gather_slot_weights`).
+
+Upload discipline (DESIGN.md §6): prefetch-class uploads (`sync`, driven by
+the OffloadEngine's admit/evict verdicts at iteration boundaries) are issued
+asynchronously — ``jax.device_put`` + a donated in-place
+``dynamic_update_slice`` dispatch without blocking, so the copies overlap
+whatever compute is already in flight, and the next consumer fences on them
+through ordinary data dependence. Demand-class uploads (`ensure`, a routed
+expert missing at use time) are the real stall: they are timed wall-clock
+from miss detection to ``block_until_ready`` on the updated buffers and
+accounted in ``demand_stall_s``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+Key = Tuple[int, int]          # (moe_layer_idx, expert_idx)
+
+EXPERT_WEIGHT_NAMES = ("w_gate", "w_up", "w_down")
+
+
+def _moe_param_location(model, layer_idx: int):
+    """-> ("prefix", i) | ("blocks", pos, g) for a MoE layer's param dict."""
+    if layer_idx < model.n_prefix:
+        return ("prefix", layer_idx)
+    off = layer_idx - model.n_prefix
+    return ("blocks", off % model.period, off // model.period)
+
+
+def strip_expert_weights(params):
+    """A copy of ``params`` with every routed-expert weight leaf removed
+    (router and shared-expert weights stay device-resident — they are used
+    by every token, so offloading them would only add latency)."""
+    out = dict(params)
+    if params.get("prefix"):
+        out["prefix"] = [
+            {**b, "moe": {k: v for k, v in b["moe"].items()
+                          if k not in EXPERT_WEIGHT_NAMES}}
+            if "moe" in b else b
+            for b in params["prefix"]]
+    if params.get("blocks"):
+        out["blocks"] = [
+            {**b, "moe": {k: v for k, v in b["moe"].items()
+                          if k not in EXPERT_WEIGHT_NAMES}}
+            if "moe" in b else b
+            for b in params["blocks"]]
+    return out
+
+
+class HostExpertStore:
+    """Host-pinned full expert parameter set, keyed ``(moe_layer, expert)``.
+
+    Extracts every MoE layer's stacked expert weights out of an initialized
+    param tree into host numpy arrays (the paper's DRAM/SSD tier contents)
+    and exposes :attr:`stripped_params` — the same tree with the expert
+    leaves removed, which is what the serving step functions close over, so
+    the device never holds more than the slot cache's ``n_slots`` experts.
+    """
+
+    def __init__(self, model, params):
+        self.n_moe = len(model.moe_layers)
+        self.n_experts = model.cfg.moe.n_experts
+        self._layers: List[Dict[str, np.ndarray]] = []
+        for layer_idx in model.moe_layers:
+            loc = _moe_param_location(model, layer_idx)
+            if loc[0] == "prefix":
+                moe_p = params["prefix"][loc[1]]["moe"]
+                pick = {k: np.asarray(moe_p[k]) for k in EXPERT_WEIGHT_NAMES
+                        if k in moe_p}
+            else:
+                _, pos, g = loc
+                moe_p = params["blocks"][pos]["moe"]
+                pick = {k: np.asarray(moe_p[k][g]) for k in EXPERT_WEIGHT_NAMES
+                        if k in moe_p}
+            self._layers.append(pick)                # each leaf: (E, …)
+        self.names = tuple(self._layers[0]) if self._layers else ()
+        self.stripped_params = strip_expert_weights(params)
+        # dtype/shape of one expert's triple (slot-buffer layout)
+        self.slot_shapes = {k: self._layers[0][k].shape[1:]
+                            for k in self.names}
+        self.dtypes = {k: self._layers[0][k].dtype for k in self.names}
+        self.expert_bytes = int(sum(
+            np.prod(self.slot_shapes[k]) * self.dtypes[k].itemsize
+            for k in self.names))
+
+    def expert(self, li: int, e: int) -> Dict[str, np.ndarray]:
+        """Host views of one expert's weight triple (no copy)."""
+        return {k: v[e] for k, v in self._layers[li].items()}
+
+    def layer(self, li: int) -> Dict[str, np.ndarray]:
+        return self._layers[li]
+
+
+class ExpertSlotCache:
+    """Fixed-shape device buffers of ``n_slots`` expert triples plus the
+    ``(L, E) → slot`` routing table.
+
+    Residency is reconciled with the OffloadEngine's GPU cache in two ways:
+    :meth:`sync` (iteration boundary — the engine's admit/evict/prefetch
+    verdicts become real async uploads/releases) and :meth:`ensure` (use
+    time — a routed expert that is not resident is demand-uploaded, timed,
+    and counted). Eviction victims for demand uploads come from the same
+    cache policy object the simulator uses (Algorithm 2 by default), so the
+    device cache never takes a replacement decision of its own.
+    """
+
+    def __init__(self, store: HostExpertStore, n_slots: int):
+        import jax
+        import jax.numpy as jnp
+        self._jax, self._jnp = jax, jnp
+        self.store = store
+        self.n_slots = int(n_slots)
+        self.bufs = {
+            name: jnp.zeros((self.n_slots,) + store.slot_shapes[name],
+                            store.dtypes[name])
+            for name in store.names}
+        self.slot_of = np.full((store.n_moe, store.n_experts), -1, np.int32)
+        self.key_of: List[Optional[Key]] = [None] * self.n_slots
+        self._free: List[int] = list(range(self.n_slots))
+        self._upload_fns = {
+            name: jax.jit(
+                lambda buf, w, s: jax.lax.dynamic_update_slice_in_dim(
+                    buf, w[None], s, 0),
+                donate_argnums=(0,))
+            for name in store.names}
+        # stats (expert-granularity; the serving engine derives per-token
+        # rates from these plus its token counters)
+        self.hits = 0
+        self.misses = 0
+        self.demand_uploads = 0
+        self.prefetch_uploads = 0
+        self.evictions = 0
+        self.upload_bytes = 0
+        self.demand_stall_s = 0.0
+
+    # -- residency ----------------------------------------------------------
+    def __contains__(self, key: Key) -> bool:
+        return self.slot_of[key[0], key[1]] >= 0
+
+    @property
+    def resident(self) -> List[Key]:
+        return [k for k in self.key_of if k is not None]
+
+    def table_row(self, li: int) -> np.ndarray:
+        """(E,) expert→slot ids for one layer, clamped to valid slots.
+        Non-resident experts point at slot 0: their gathered weights are
+        garbage, which is safe — an expert is only *gathered into compute
+        that matters* when a real token routes to it, and `ensure` makes
+        exactly those experts resident before the expert GEMM runs."""
+        return np.maximum(self.slot_of[li], 0).astype(np.int32)
+
+    # -- movement -----------------------------------------------------------
+    def _upload(self, key: Key) -> None:
+        slot = self._free.pop()
+        w = self.store.expert(*key)
+        for name, arr in w.items():
+            dev = self._jax.device_put(arr)
+            self.bufs[name] = self._upload_fns[name](
+                self.bufs[name], dev, slot)
+        self.slot_of[key[0], key[1]] = slot
+        self.key_of[slot] = key
+        self.upload_bytes += self.store.expert_bytes
+
+    def evict(self, key: Key) -> None:
+        slot = int(self.slot_of[key[0], key[1]])
+        if slot < 0:
+            return
+        self.slot_of[key[0], key[1]] = -1
+        self.key_of[slot] = None
+        self._free.append(slot)
+        self.evictions += 1
+
+    def fence(self) -> None:
+        """Block until every in-flight slot upload has landed."""
+        for buf in self.bufs.values():
+            self._jax.block_until_ready(buf)
+
+    # -- the two reconciliation paths ---------------------------------------
+    def sync(self, target_keys: Iterable[Key]) -> int:
+        """Reconcile device residency with the offload engine's GPU-cache
+        verdicts (iteration boundary). Async: no fence — the uploads overlap
+        in-flight compute and the next consuming step fences by data
+        dependence. Returns the number of prefetch-class uploads issued."""
+        target = set(target_keys)
+        for key in self.resident:
+            if key not in target:
+                self.evict(key)
+        n = 0
+        for key in target:
+            if key not in self and self._free:
+                self._upload(key)
+                self.prefetch_uploads += 1
+                n += 1
+        return n
+
+    def ensure(self, keys: Sequence[Key], victim_fn=None) -> int:
+        """Make ``keys`` (this layer's routed experts) resident *now*.
+        Misses are demand uploads: timed wall-clock through a fence (the
+        real analog of the simulator's demand-fetch stall) and victims —
+        when the cache is full — come from ``victim_fn(resident,
+        protected)``, the engine's cache-policy verdict. Returns the
+        number of misses.
+
+        Measurement note: the functional slot-buffer updates chain, so the
+        fence also waits out any still-in-flight prefetch uploads the
+        demand copy queued behind — like a demand read behind issued
+        copies on a real link. ``demand_stall_s`` is therefore the wall
+        time the step actually stalled at the miss point, not the isolated
+        cost of the missing experts' bytes (the simulator's queue-jumping
+        demand class models the latter)."""
+        missing = [k for k in keys if k not in self]
+        self.hits += len(keys) - len(missing)
+        self.misses += len(missing)
+        if not missing:
+            return 0
+        t0 = time.perf_counter()
+        protected = frozenset(keys)
+        for key in missing:
+            if not self._free:
+                victim = victim_fn(self.resident, protected) \
+                    if victim_fn else next(
+                        k for k in self.key_of if k not in protected)
+                if victim is None or victim in protected:
+                    raise RuntimeError(
+                        f"expert slot cache too small: {self.n_slots} slots "
+                        f"cannot hold one layer's {len(keys)} routed experts")
+                self.evict(victim)
+            self._upload(key)
+            self.demand_uploads += 1
+        self.fence()
+        self.demand_stall_s += time.perf_counter() - t0
+        return len(missing)
+
+    def stats(self) -> dict:
+        return {
+            "weight_slots": self.n_slots,
+            "slot_hits": self.hits,
+            "slot_misses": self.misses,
+            "demand_uploads": self.demand_uploads,
+            "prefetch_uploads": self.prefetch_uploads,
+            "slot_evictions": self.evictions,
+            "upload_bytes": self.upload_bytes,
+            "demand_stall_s": self.demand_stall_s,
+        }

@@ -85,3 +85,25 @@ def moe_ffn(xg, w_gate, w_up, w_down, *, act: str = "swiglu",
         out_shape=jax.ShapeDtypeStruct((E, C, d), xg.dtype),
         interpret=interpret,
     )(*operands)
+
+
+def moe_ffn_slots(xg, slot_weights, slot_ids, *, act: str = "swiglu",
+                  block_c: int = 128, block_f: int = 512,
+                  interpret: bool = False):
+    """Slot-indexed grouped expert FFN: the kernel entry point for the
+    device-resident expert slot cache (DESIGN.md §6).
+
+    ``slot_weights``: {w_up (n_slots, d, f), w_down (n_slots, f, d),
+    w_gate? (n_slots, d, f)} — the stacked per-slot buffers; ``slot_ids``:
+    (E,) int32 expert→slot table row for this layer. The gather
+    materializes per-expert weight views in the same (E, d, f) layout the
+    kernel's expert-major grid expects, so the grid/BlockSpec structure —
+    and the expert-parallel sharding story on the leading axis — is
+    unchanged from the dense path. Numerically identical to `moe_ffn` on
+    the dense weights the slots were uploaded from (bit-equal gather)."""
+    wg = (jnp.take(slot_weights["w_gate"], slot_ids, axis=0)
+          if "w_gate" in slot_weights else None)
+    wu = jnp.take(slot_weights["w_up"], slot_ids, axis=0)
+    wd = jnp.take(slot_weights["w_down"], slot_ids, axis=0)
+    return moe_ffn(xg, wg, wu, wd, act=act, block_c=block_c,
+                   block_f=block_f, interpret=interpret)

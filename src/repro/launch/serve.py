@@ -62,6 +62,15 @@ def main(argv=None):
     ap.add_argument("--dram-cache", type=int, default=8,
                     help="host-DRAM cache slots; experts beyond it are "
                          "SSD-resident and pay the NVMe hop on a miss")
+    ap.add_argument("--resident-fraction", type=float, default=1.0,
+                    help="fraction of the L×E expert set held in device "
+                         "weight slots. 1.0 (default) keeps every expert "
+                         "resident (fused step); < 1.0 streams real expert "
+                         "weights through the slot cache, with the offload "
+                         "engine's verdicts driving actual uploads")
+    ap.add_argument("--weight-slots", type=int, default=None,
+                    help="explicit device expert-slot count (overrides "
+                         "--resident-fraction)")
     ap.add_argument("--ssd-gbps", type=float, default=None,
                     help="SSD→DRAM bandwidth in GB/s (e.g. 3.5 for a "
                          "consumer NVMe; 'inf' disables the SSD tier)")
@@ -122,7 +131,9 @@ def main(argv=None):
                      scheduler=SchedulerConfig(max_batch=args.slots,
                                                policy=args.policy),
                      keep_request_eams=False,
-                     eamc_online=args.eamc_online),
+                     eamc_online=args.eamc_online,
+                     resident_fraction=args.resident_fraction,
+                     n_weight_slots=args.weight_slots),
         model, params, eamc=eamc,
         cache_len=args.prompt_len + args.max_new)
 
@@ -148,7 +159,8 @@ def main(argv=None):
         print(f"req {r.rid}: prompt={r.prompt_len} new={len(toks)} "
               f"slotwait={r.queue_delay*1e3:.1f}ms "
               f"e2e={r.latency*1e3:.1f}ms "
-              f"tok-lat={r.per_token_latency*1e3:.2f}ms")
+              f"tok-lat={r.per_token_latency*1e3:.2f}ms "
+              f"toks={','.join(str(t) for t in toks)}")
     e2e = np.mean([r.latency for r in reqs])
     print(f"total: {args.requests} requests, policy={args.policy}, "
           f"hit={stats['gpu_hit_ratio']:.3f}, "
@@ -164,6 +176,20 @@ def main(argv=None):
           f"(demand {stats['ssd_demand_bytes']/1e6:.1f}), "
           f"miss-cost dram={stats['miss_cost_dram']*1e3:.2f}ms "
           f"ssd={stats['miss_cost_ssd']*1e3:.2f}ms")
+    if srv.slot_runtime is not None:
+        n_moe = len(model.moe_layers)
+        total = n_moe * cfg.moe.n_experts
+        print(f"slots: resident={stats['weight_slots']}/{total} "
+              f"hit-ratio={stats['slot_hit_ratio']:.3f} "
+              f"hits={stats['slot_hits']} misses={stats['slot_misses']} "
+              f"demand-uploads={stats['demand_uploads']} "
+              f"prefetch-uploads={stats['prefetch_uploads']} "
+              f"evictions={stats['slot_evictions']} "
+              f"uploaded={stats['upload_bytes']/1e6:.1f}MB "
+              f"demand-stall={stats['demand_stall_s']*1e3:.1f}ms "
+              f"({stats['demand_stall_per_token_s']*1e3:.2f}ms/token)")
+    else:
+        print("slots: all-resident (resident-fraction 1.0)")
     learned = stats["eamc_online_inserts"] + stats["eamc_online_merges"]
     print(f"eamc: source={eamc_source} entries={stats['eamc_entries']} "
           f"learned={learned} "

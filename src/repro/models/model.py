@@ -170,9 +170,16 @@ class Model:
         return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
 
     # -- full-sequence block application ------------------------------------
-    def _apply_block(self, p, desc: LayerDesc, x, positions, *,
-                     enc_kv=None, capacity_factor=None, expert_fn=None,
-                     token_mask=None):
+    # Blocks are split into a *pre* half (mixer: attn/mamba/rwkv time-mix,
+    # cross-attn, norm2 → h2) and a *post* half (FFN: rwkv channel-mix,
+    # routed MoE, or dense FFN → residual). The fused paths compose the two;
+    # the expert-slot-cache runtime jits them separately so the host can see
+    # the router's expert choices (computed from h2) and upload missing
+    # expert weights *before* the expert GEMM consumes them (DESIGN.md §6).
+    def _apply_block_pre(self, p, desc: LayerDesc, x, positions, *,
+                         enc_kv=None):
+        """Mixer half. Returns (x_mid, h2, aux) — aux carries the mixer
+        state (kv/mamba_state/rwkv_state/rwkv_tm) prefill seeding needs."""
         cfg = self.cfg
         aux = {}
         h = apply_norm(p["norm1"], x)
@@ -197,6 +204,16 @@ class Model:
                                           kv=enc_kv)
             x = x + yc
         h2 = apply_norm(p["norm2"], x)
+        return x, h2, aux
+
+    def _apply_block_post(self, p, desc: LayerDesc, x_mid, h2, *,
+                          capacity_factor=None, expert_fn=None,
+                          token_mask=None, routing=None, slot_weights=None,
+                          slot_ids=None):
+        """FFN half. Returns (x_out, aux) — aux carries counts/aux_loss
+        (MoE) or rwkv_cm (rwkv channel-mix shift state)."""
+        cfg = self.cfg
+        aux = {}
         if desc.kind == BLOCK_RWKV:
             y2, last_cm = rwkv_lib.rwkv_channel_mix(p["rwkv"], cfg, h2)
             aux["rwkv_cm"] = h2[:, -1]
@@ -204,14 +221,27 @@ class Model:
         elif desc.is_moe:
             y2, moe_aux = moe_ffn(p["moe"], cfg, h2,
                                   capacity_factor=capacity_factor,
-                                  expert_fn=expert_fn, token_mask=token_mask)
+                                  expert_fn=expert_fn, token_mask=token_mask,
+                                  routing=routing, slot_weights=slot_weights,
+                                  slot_ids=slot_ids)
             aux["counts"] = moe_aux["counts"]
             aux["aux_loss"] = moe_aux["aux_loss"]
         else:
             y2 = apply_ffn(p["ffn"], h2, cfg.act)
         if cfg.post_block_norm:
             y2 = apply_norm(p["post_norm2"], y2)
-        return x + y2, aux
+        return x_mid + y2, aux
+
+    def _apply_block(self, p, desc: LayerDesc, x, positions, *,
+                     enc_kv=None, capacity_factor=None, expert_fn=None,
+                     token_mask=None):
+        x_mid, h2, aux = self._apply_block_pre(p, desc, x, positions,
+                                               enc_kv=enc_kv)
+        x_out, aux_ffn = self._apply_block_post(
+            p, desc, x_mid, h2, capacity_factor=capacity_factor,
+            expert_fn=expert_fn, token_mask=token_mask)
+        aux.update(aux_ffn)
+        return x_out, aux
 
     def _embed(self, params, batch):
         cfg = self.cfg
@@ -415,17 +445,14 @@ class Model:
         return out
 
     # -- decode-path block ----------------------------------------------------
-    def _decode_block(self, p, desc: LayerDesc, bc, x, pos, decode_window,
-                      expert_fn=None, active=None):
-        """One-token decode through one block. ``pos`` may be a (B,) per-slot
-        position vector; ``active`` an optional (B,) bool mask — cache rows of
-        inactive slots are left untouched (attention K/V, ring pointers, and
-        recurrent mamba/rwkv state all stay frozen), so free or
-        just-prefilled slots in a slot pool never advance their state."""
+    def _decode_block_pre(self, p, desc: LayerDesc, bc, x, pos,
+                          decode_window, active=None):
+        """Mixer half of one-token decode (norm1 → attn/mamba/rwkv-TM →
+        cross-attn → norm2). Cache rows of inactive slots stay frozen.
+        Returns (x_mid, h2, bc)."""
         cfg = self.cfg
         prev = dict(bc)
         win = desc.window or decode_window
-        counts = None
         h = apply_norm(p["norm1"], x)
         if desc.kind == BLOCK_ATTN:
             if cfg.attn.mla is not None:
@@ -453,6 +480,19 @@ class Model:
                                             cross=True)
             x = x + yc
         h2 = apply_norm(p["norm2"], x)
+        if active is not None:
+            bc = {key: (val if val is prev[key]
+                        else _gate_rows(active, val, prev[key]))
+                  for key, val in bc.items()}
+        return x, h2, bc
+
+    def _decode_block_post(self, p, desc: LayerDesc, bc, x_mid, h2, *,
+                           expert_fn=None, active=None, routing=None,
+                           slot_weights=None, slot_ids=None):
+        """FFN half of one-token decode. Returns (x_out, bc, counts)."""
+        cfg = self.cfg
+        prev = dict(bc)
+        counts = None
         if desc.kind == BLOCK_RWKV:
             y2, bc["cm"] = rwkv_lib.rwkv_channel_mix(p["rwkv"], cfg, h2,
                                                      bc["cm"])
@@ -462,7 +502,9 @@ class Model:
             cf = (cfg.decode_capacity_factor
                   or cfg.moe.n_experts / cfg.moe.top_k)
             y2, moe_aux = moe_ffn(p["moe"], cfg, h2, capacity_factor=cf,
-                                  expert_fn=expert_fn)
+                                  expert_fn=expert_fn, routing=routing,
+                                  slot_weights=slot_weights,
+                                  slot_ids=slot_ids)
             counts = moe_aux["counts"]
         else:
             y2 = apply_ffn(p["ffn"], h2, cfg.act)
@@ -472,7 +514,19 @@ class Model:
             bc = {key: (val if val is prev[key]
                         else _gate_rows(active, val, prev[key]))
                   for key, val in bc.items()}
-        return x + y2, bc, counts
+        return x_mid + y2, bc, counts
+
+    def _decode_block(self, p, desc: LayerDesc, bc, x, pos, decode_window,
+                      expert_fn=None, active=None):
+        """One-token decode through one block. ``pos`` may be a (B,) per-slot
+        position vector; ``active`` an optional (B,) bool mask — cache rows of
+        inactive slots are left untouched (attention K/V, ring pointers, and
+        recurrent mamba/rwkv state all stay frozen), so free or
+        just-prefilled slots in a slot pool never advance their state."""
+        x_mid, h2, bc = self._decode_block_pre(p, desc, bc, x, pos,
+                                               decode_window, active=active)
+        return self._decode_block_post(p, desc, bc, x_mid, h2,
+                                       expert_fn=expert_fn, active=active)
 
     @staticmethod
     def _ring(pos, cache_phys_len, win):
@@ -481,6 +535,40 @@ class Model:
         if win and cache_phys_len <= win:
             return pos % cache_phys_len
         return pos
+
+    def _seed_mixer_cache(self, p, desc: LayerDesc, bc, h_in, aux, ekv=None):
+        """Seed a block cache's *mixer* state from a full-prompt prefill
+        pass: attention K/V tails (+ cross K/V), mamba conv/ssm, rwkv
+        time-mix state. ``aux`` is the mixer aux of `_apply_block_pre`;
+        ``h_in`` the block's input activations (the mamba conv tail and the
+        rwkv time-mix shift are functions of the *normed block input*, not
+        of any mixer output). The rwkv channel-mix shift (``cm``) comes
+        from the post half and is seeded by the caller."""
+        cfg = self.cfg
+        bc = dict(bc)
+        if desc.kind == BLOCK_ATTN:
+            if cfg.attn.mla is not None:
+                ckv, kr = aux["kv"]
+                bc["ckv"] = _seed(bc["ckv"], ckv)
+                bc["kr"] = _seed(bc["kr"], kr)
+            else:
+                k, v = aux["kv"]
+                bc["k"] = _seed(bc["k"], k)
+                bc["v"] = _seed(bc["v"], v)
+                if ekv is not None:
+                    bc["cross_k"] = ekv[0].astype(bc["cross_k"].dtype)
+                    bc["cross_v"] = ekv[1].astype(bc["cross_v"].dtype)
+        elif desc.kind == BLOCK_MAMBA:
+            xin_norm = apply_norm(p["norm1"], h_in)
+            bc["conv"] = _conv_tail(xin_norm, cfg, p["mamba"]).astype(
+                bc["conv"].dtype)
+            bc["ssm"] = aux["mamba_state"]
+        else:  # rwkv
+            bc["state"] = aux["rwkv_state"]
+            # time-mix shift = last *normed* block input token
+            bc["tm"] = apply_norm(p["norm1"], h_in)[:, -1].astype(
+                bc["tm"].dtype)
+        return bc
 
     # -- public: prefill / serve_step -----------------------------------------
     def prefill(self, params, batch, cache, *, expert_fn=None,
@@ -521,27 +609,8 @@ class Model:
                                         capacity_factor=2.0,
                                         expert_fn=expert_fn,
                                         token_mask=token_mask)
-            if desc.kind == BLOCK_ATTN:
-                if cfg.attn.mla is not None:
-                    ckv, kr = aux["kv"]
-                    bc["ckv"] = _seed(bc["ckv"], ckv)
-                    bc["kr"] = _seed(bc["kr"], kr)
-                else:
-                    k, v = aux["kv"]
-                    bc["k"] = _seed(bc["k"], k)
-                    bc["v"] = _seed(bc["v"], v)
-                    if ekv is not None:
-                        bc["cross_k"] = ekv[0].astype(bc["cross_k"].dtype)
-                        bc["cross_v"] = ekv[1].astype(bc["cross_v"].dtype)
-            elif desc.kind == BLOCK_MAMBA:
-                xin_norm = apply_norm(p["norm1"], h)
-                bc["conv"] = _conv_tail(xin_norm, cfg, p["mamba"]).astype(
-                    bc["conv"].dtype)
-                bc["ssm"] = aux["mamba_state"]
-            else:  # rwkv
-                bc["state"] = aux["rwkv_state"]
-                # time-mix shift = last *normed* block input token
-                bc["tm"] = apply_norm(p["norm1"], h)[:, -1].astype(bc["tm"].dtype)
+            bc = self._seed_mixer_cache(p, desc, bc, h, aux, ekv)
+            if desc.kind == BLOCK_RWKV:
                 # channel-mix shift = last normed pre-CM token
                 bc["cm"] = aux["rwkv_cm"].astype(bc["cm"].dtype)
             return h2, bc, aux.get("counts")

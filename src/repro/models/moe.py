@@ -89,8 +89,28 @@ def route(p, m: MoEConfig, xf):
     return gates, idx, probs
 
 
+def gather_slot_weights(p, slot_weights, slot_ids):
+    """Substitute slot-cache expert weights into a MoE param dict.
+
+    ``slot_weights``: stacked per-slot triples {w_up (n_slots, d, f),
+    w_down (n_slots, f, d), w_gate? (n_slots, d, f)} — the device-resident
+    expert slot buffers. ``slot_ids``: (E,) int32 expert→slot table row for
+    this layer. Non-resident experts must be clamped to a valid slot by the
+    caller; their weights are garbage but harmless — an expert no real token
+    routes to contributes nothing to the output (zero gate / empty capacity
+    block), so only *activated* experts need live slots."""
+    p = dict(p)
+    for name in ("w_gate", "w_up", "w_down"):
+        if name in slot_weights:
+            p[name] = jnp.take(slot_weights[name], slot_ids, axis=0)
+        else:
+            p.pop(name, None)
+    return p
+
+
 def moe_ffn(p, cfg: ArchConfig, x, *, capacity_factor: float | None = None,
-            expert_fn=None, token_mask=None):
+            expert_fn=None, token_mask=None, routing=None,
+            slot_weights=None, slot_ids=None):
     """Apply the routed MoE to x (B, S, d).
 
     Returns (y, aux) where aux = {"counts": (B, E) int32 per-sequence expert
@@ -101,15 +121,28 @@ def moe_ffn(p, cfg: ArchConfig, x, *, capacity_factor: float | None = None,
     prefill): masked-out tokens are routed nowhere — they consume no expert
     capacity (so they cannot displace real tokens) and contribute nothing to
     ``counts`` (so pad tokens never reach the EAM or the offload engine).
+    ``routing``: optional precomputed (gates (T,k), idx (T,k)) from
+    :func:`route` over the flattened tokens — the slot-cache runtime routes
+    in a separate jitted call so the host can upload missing experts before
+    the expert GEMM runs; aux_loss is 0 on this path (serving never uses it).
+    ``slot_weights``/``slot_ids``: expert weights live in the device slot
+    cache instead of ``p`` (see :func:`gather_slot_weights`).
     """
+    if slot_weights is not None:
+        p = gather_slot_weights(p, slot_weights, slot_ids)
     if cfg.moe_dispatch == "grouped" and x.shape[0] > 1:
         return moe_ffn_grouped(p, cfg, x, capacity_factor=capacity_factor,
-                               expert_fn=expert_fn, token_mask=token_mask)
+                               expert_fn=expert_fn, token_mask=token_mask,
+                               routing=routing)
     m = cfg.moe
     B, S, d = x.shape
     T = B * S
     xf = x.reshape(T, d)
-    gates, idx, probs = route(p, m, xf)                     # (T,k) (T,k) (T,E)
+    if routing is None:
+        gates, idx, probs = route(p, m, xf)                 # (T,k) (T,k) (T,E)
+    else:
+        gates, idx = routing
+        probs = None
     C = capacity(T, m, capacity_factor)
     E, k = m.n_experts, m.top_k
 
@@ -162,15 +195,18 @@ def moe_ffn(p, cfg: ArchConfig, x, *, capacity_factor: float | None = None,
         one_hot = one_hot * jnp.repeat(token_mask.astype(jnp.int32), k,
                                        axis=1)[..., None]
     counts = one_hot.sum(axis=1)                             # (B, E)
-    frac_tokens = counts.sum(axis=0).astype(jnp.float32) / (T * k)
-    frac_probs = probs.mean(axis=0)
-    aux_loss = m.aux_loss_coef * E * jnp.sum(frac_tokens * frac_probs)
+    if probs is None:
+        aux_loss = jnp.float32(0)
+    else:
+        frac_tokens = counts.sum(axis=0).astype(jnp.float32) / (T * k)
+        frac_probs = probs.mean(axis=0)
+        aux_loss = m.aux_loss_coef * E * jnp.sum(frac_tokens * frac_probs)
     return y, {"counts": counts, "aux_loss": aux_loss}
 
 
 def moe_ffn_grouped(p, cfg: ArchConfig, x, *,
                     capacity_factor: float | None = None, expert_fn=None,
-                    token_mask=None):
+                    token_mask=None, routing=None):
     """Per-sequence-group dispatch (GShard grouping, G = batch).
 
     The group dim stays sharded on the batch/data mesh axes end-to-end, so
@@ -185,7 +221,10 @@ def moe_ffn_grouped(p, cfg: ArchConfig, x, *,
     m = cfg.moe
     B, S, d = x.shape
     E, k = m.n_experts, m.top_k
-    gates, idx, probs = route(p, m, x.reshape(B * S, d))
+    if routing is None:
+        gates, idx, probs = route(p, m, x.reshape(B * S, d))
+    else:
+        (gates, idx), probs = routing, None
     gates = gates.reshape(B, S, k)
     idx = idx.reshape(B, S, k)
     C = capacity(S, m, capacity_factor)
@@ -249,9 +288,12 @@ def moe_ffn_grouped(p, cfg: ArchConfig, x, *,
         one_hot = one_hot * jnp.repeat(token_mask.astype(jnp.int32), k,
                                        axis=1)[..., None]
     counts = one_hot.sum(axis=1)
-    frac_tokens = counts.sum(axis=0).astype(jnp.float32) / (B * S * k)
-    frac_probs = probs.mean(axis=0)
-    aux_loss = m.aux_loss_coef * E * jnp.sum(frac_tokens * frac_probs)
+    if probs is None:
+        aux_loss = jnp.float32(0)
+    else:
+        frac_tokens = counts.sum(axis=0).astype(jnp.float32) / (B * S * k)
+        frac_probs = probs.mean(axis=0)
+        aux_loss = m.aux_loss_coef * E * jnp.sum(frac_tokens * frac_probs)
     return y, {"counts": counts, "aux_loss": aux_loss}
 
 

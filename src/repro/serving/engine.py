@@ -100,6 +100,16 @@ class EngineConfig:
     eamc_online: bool = False
     eamc_drift_threshold: float = 0.6
     eamc_drift_min_seqs: int = 8
+    # device-resident expert slot cache (model mode, DESIGN.md §6):
+    # fraction of the L×E expert set held in fixed device weight slots.
+    # 1.0 = everything resident (the fused single-jit step); < 1.0 streams
+    # real expert weights through the layered runtime, with the offload
+    # engine's verdicts driving actual device uploads. ``n_weight_slots``
+    # pins the slot count explicitly (overrides the fraction). In slot mode
+    # the simulator's GPU cache capacity is forced equal to the slot count —
+    # they are the same physical resource.
+    resident_fraction: float = 1.0
+    n_weight_slots: Optional[int] = None
 
 
 class StepEngine:
@@ -443,6 +453,7 @@ class JaxModelServer(StepEngine):
                  n_slots: Optional[int] = None,
                  cache_len: Optional[int] = None,
                  prefill_buckets=None):
+        cfg, n_weight_slots = self._resolve_weight_slots(cfg)
         super().__init__(cfg, eamc=eamc)
         self.model = model
         self.params = params
@@ -468,8 +479,40 @@ class JaxModelServer(StepEngine):
             self._scheduler_cfg(),
             cold_cost_fn=self._predicted_cold_cost,
             stall_budget=self._stall_budget())
+        # device-resident expert slot cache: real weight streaming through
+        # the layered runtime (DESIGN.md §6); None = all-resident fused step
+        self.slot_runtime = None
+        if n_weight_slots is not None:
+            from repro.serving.slot_runtime import SlotStreamRuntime
+            self.slot_runtime = SlotStreamRuntime(
+                model, params,
+                n_pool_slots=self.n_slots,
+                n_weight_slots=n_weight_slots,
+                victim_fn=self.offload.gpu_cache.policy.victim,
+                compile_counts=self.compile_counts)
+            # the device now only holds the stripped tree + the slot buffers
+            self.params = self.slot_runtime.params
 
-    # -- pool management -------------------------------------------------------
+    @staticmethod
+    def _resolve_weight_slots(cfg: EngineConfig):
+        """Resolve ``resident_fraction``/``n_weight_slots`` into a concrete
+        slot count (or None = all-resident) and force the simulator's GPU
+        cache to the same capacity — device slots and the simulated GPU
+        cache are one physical resource. Floor: one layer's worst-case
+        routed set (E experts), the minimum the layered walk needs resident
+        at use time."""
+        arch = cfg.arch
+        if arch.moe is None:
+            return cfg, None
+        n_moe = sum(arch.is_moe_layer(i) for i in range(arch.n_layers))
+        total = n_moe * arch.moe.n_experts
+        if cfg.n_weight_slots is None and cfg.resident_fraction >= 1.0:
+            return cfg, None
+        n = (cfg.n_weight_slots if cfg.n_weight_slots is not None
+             else int(round(cfg.resident_fraction * total)))
+        n = min(total, max(n, min(total, arch.moe.n_experts)))
+        from dataclasses import replace
+        return replace(cfg, n_weight_slots=n, gpu_cache_experts=n), n
     def _scheduler_cfg(self) -> SchedulerConfig:
         from dataclasses import replace
         scfg = self.cfg.scheduler
@@ -489,7 +532,12 @@ class JaxModelServer(StepEngine):
                 or need_len > self.cache_len:
             self.cache_len = _pow2_bucket(max(need_len, self.cache_len or 0),
                                           lo=32)
-        self._cache = self.model.init_cache(self.n_slots, self.cache_len)
+        if self.slot_runtime is not None:
+            # the layered runtime owns its own (flat per-layer) pool cache
+            self.slot_runtime.build_pool(self.cache_len)
+            self._cache = "slot-runtime-pool"
+        else:
+            self._cache = self.model.init_cache(self.n_slots, self.cache_len)
         self._tok = np.zeros(self.n_slots, np.int32)
         self._free = list(range(self.n_slots))
         # cache shapes changed: new jit cache entries will trace
@@ -550,6 +598,13 @@ class JaxModelServer(StepEngine):
                          ) -> np.ndarray:
         import jax.numpy as jnp
 
+        if self.slot_runtime is not None:
+            # iteration boundary: the offload engine's admit/evict/prefetch
+            # verdicts from the previous iteration become real async uploads
+            # that overlap whatever is still executing (DESIGN.md §6)
+            self.slot_runtime.sync_residency(
+                set(self.offload.gpu_cache.resident))
+
         cols: Dict[int, np.ndarray] = {}
         for r in reqs:
             if r.state != PREFILL:
@@ -564,9 +619,12 @@ class JaxModelServer(StepEngine):
             P = self._bucket(S)
             padded = np.zeros(P, np.int32)
             padded[:S] = np.asarray(r.prompt, np.int32)
-            tok0, self._cache, cnts = self._get_prefill_fn(P)(
-                self.params, self._cache, jnp.asarray(padded[None]),
-                jnp.asarray([S], jnp.int32), jnp.asarray(slot, jnp.int32))
+            if self.slot_runtime is not None:
+                tok0, cnts = self.slot_runtime.prefill(padded, S, slot)
+            else:
+                tok0, self._cache, cnts = self._get_prefill_fn(P)(
+                    self.params, self._cache, jnp.asarray(padded[None]),
+                    jnp.asarray([S], jnp.int32), jnp.asarray(slot, jnp.int32))
             self._tok[slot] = int(tok0)
             self.generated[r.rid] = [int(tok0)]
             cols[r.rid] = np.asarray(cnts)
@@ -576,10 +634,13 @@ class JaxModelServer(StepEngine):
             active = np.zeros(self.n_slots, bool)
             for r in deciders:
                 active[self._slot_of[r.rid]] = True
-            tok_new, self._cache, cnts = self._get_step_fn()(
-                self.params, self._cache, jnp.asarray(self._tok),
-                jnp.asarray(active))
-            tok_new, cnts = np.asarray(tok_new), np.asarray(cnts)
+            if self.slot_runtime is not None:
+                tok_new, cnts = self.slot_runtime.decode(self._tok, active)
+            else:
+                tok_new, self._cache, cnts = self._get_step_fn()(
+                    self.params, self._cache, jnp.asarray(self._tok),
+                    jnp.asarray(active))
+                tok_new, cnts = np.asarray(tok_new), np.asarray(cnts)
             for r in deciders:
                 s = self._slot_of[r.rid]
                 self._tok[s] = tok_new[s]
@@ -593,6 +654,22 @@ class JaxModelServer(StepEngine):
         if slot is not None:
             self._free.append(slot)
         r.slot = -1
+
+    # -- metrics ---------------------------------------------------------------
+    def stats(self) -> dict:
+        """Adds the *measured* slot-cache counters (expert-granularity hits/
+        misses, real upload traffic, wall-clock demand stall) next to the
+        simulator's modeled ones — the sim↔real crosswalk of DESIGN.md §6."""
+        s = super().stats()
+        if self.slot_runtime is not None:
+            rs = self.slot_runtime.slot_cache.stats()
+            s.update(rs)
+            tot = rs["slot_hits"] + rs["slot_misses"]
+            s["slot_hit_ratio"] = rs["slot_hits"] / tot if tot else 1.0
+            toks = max(1, self.prefill_tokens + self.decode_tokens)
+            s["demand_uploads_per_token"] = rs["demand_uploads"] / toks
+            s["demand_stall_per_token_s"] = rs["demand_stall_s"] / toks
+        return s
 
     # -- request-loop API ------------------------------------------------------
     def submit(self, request: Request) -> None:
@@ -640,6 +717,6 @@ class JaxModelServer(StepEngine):
         out = np.stack([np.asarray(self.generated.pop(r.rid), np.int64)
                         for r in reqs])
         eams = [self.request_eams.pop(r.rid, None) for r in reqs]
-        stats = dict(self.offload.stats(),
+        stats = dict(self.stats(),
                      mean_token_latency=float(np.mean(self.token_latencies)))
         return out, {"eams": eams, **stats}

@@ -1,0 +1,365 @@
+"""Layered streaming execution for model-mode serving with the expert slot
+cache (DESIGN.md §6).
+
+The fused slot-pool step (`JaxModelServer._get_step_fn`) jits the whole
+model, which requires every expert the iteration might touch to be device
+resident *before* the step launches — impossible to know, since layer
+``l``'s router runs on activations produced by layer ``l-1``. This runtime
+instead walks the stack one layer at a time with the block split at the MoE
+boundary:
+
+    pre  (jit)  — mixer half + norm2 + **router top-k** for this layer
+    host        — read the routed expert ids, `ensure` them in the slot
+                  cache (misses = timed demand uploads, victims = the
+                  engine's Algorithm-2 verdict)
+    post (jit)  — capacity dispatch consuming *gathered per-slot weights*
+                  (`moe_ffn(routing=…, slot_weights=…, slot_ids=…)`)
+
+so only ONE layer's routed expert set must ever be resident at use time
+(the capacity floor is ``E``, not ``L×E``), and prefetch uploads issued at
+iteration boundaries overlap the layers still executing in front of them —
+the fence is the data dependence of the first ``post`` that consumes the
+updated buffer, exactly "block at use time".
+
+Numerics are bit-identical to the fused path: the per-layer jits run the
+same ops on the same values (verified by tests/test_slot_cache.py), the
+router is evaluated once per layer in ``pre`` and its (gates, idx) handed
+to ``post`` verbatim, and a gathered slot triple is bit-equal to the dense
+expert weight it was uploaded from.
+
+Compile accounting: every jitted piece counts its traces into the server's
+``compile_counts`` under ``("slot_*", …)`` keys; per distinct layer
+signature there is one compile, not one per layer instance, so warmup cost
+is O(period), like the fused scan.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.slot_cache import ExpertSlotCache, HostExpertStore
+from repro.models.moe import route
+
+
+class SlotStreamRuntime:
+    """Per-layer jitted prefill/decode over a pooled, slot-indexed cache,
+    streaming expert weights through an :class:`ExpertSlotCache`."""
+
+    def __init__(self, model, params, *, n_pool_slots: int,
+                 n_weight_slots: int, victim_fn=None, compile_counts=None):
+        import jax
+        import jax.numpy as jnp
+        if model.cfg.is_encoder_decoder:
+            raise NotImplementedError(
+                "slot-cache streaming does not support encoder-decoder "
+                "models yet; run them all-resident (resident_fraction=1.0)")
+        self._jax, self._jnp = jax, jnp
+        self.model = model
+        self.cfg = model.cfg
+        self.store = HostExpertStore(model, params)
+        self.params = self.store.stripped_params
+        self.slot_cache = ExpertSlotCache(self.store, n_weight_slots)
+        self.victim_fn = victim_fn
+        self.n_pool_slots = n_pool_slots
+        self.compile_counts = (compile_counts if compile_counts is not None
+                               else {})
+        self.cache_len: Optional[int] = None
+        self.pos = np.zeros(n_pool_slots, np.int32)
+        self.layer_caches: List = []
+        self._fns: Dict = {}
+        # per-layer device param slices (expert weights already stripped)
+        self._layer_params = []
+        for i in range(len(model.descs)):
+            if i < model.n_prefix:
+                self._layer_params.append(self.params["prefix"][i])
+            else:
+                off = i - model.n_prefix
+                pos_, g = off % model.period, off // model.period
+                self._layer_params.append(jax.tree.map(
+                    lambda a, g=g: a[g], self.params["blocks"][pos_]))
+        self._moe_li = {idx: li for li, idx in enumerate(model.moe_layers)}
+
+    # -- pool lifecycle ------------------------------------------------------
+    def build_pool(self, cache_len: int) -> None:
+        """(Re)build the pooled per-layer decode caches (flat per-layer
+        list — the layered walk never needs the fused scan's group
+        stacking). Jitted pieces close over ``cache_len``, so they rebuild
+        with the pool."""
+        self.cache_len = cache_len
+        B = self.n_pool_slots
+        self.layer_caches = [
+            self.model._block_cache(d, B, cache_len, 0)
+            for d in self.model.descs]
+        self.pos = np.zeros(B, np.int32)
+        self._fns.clear()
+
+    def sync_residency(self, target_keys) -> int:
+        """Iteration-boundary reconciliation: the OffloadEngine's GPU-cache
+        verdicts (admissions, prefetch arrivals, evictions) become real
+        async uploads/slot releases."""
+        return self.slot_cache.sync(target_keys)
+
+    # -- jit bookkeeping -----------------------------------------------------
+    def _count(self, key) -> None:
+        self.compile_counts[key] = self.compile_counts.get(key, 0) + 1
+
+    def _fn(self, key, builder):
+        f = self._fns.get(key)
+        if f is None:
+            f = self._fns[key] = builder()
+        return f
+
+    def _is_moe(self, i: int) -> bool:
+        return i in self._moe_li
+
+    def _ensure(self, li: int, expert_ids) -> None:
+        self.slot_cache.ensure([(li, int(e)) for e in expert_ids],
+                               self.victim_fn)
+
+    # -- decode --------------------------------------------------------------
+    def _decode_embed(self):
+        def build():
+            jax, jnp = self._jax, self._jnp
+            model, cfg = self.model, self.cfg
+
+            def impl(params, tok, pos):
+                self._count("slot_embed")
+                x = params["embed"][tok][:, None]
+                if cfg.embed_scale:
+                    x = x * jnp.asarray(cfg.d_model ** 0.5, model.dtype)
+                if not cfg.attn.use_rope:
+                    x = x + params["pos_embed"][pos][:, None]
+                return x
+            return jax.jit(impl)
+        return self._fn("slot_embed", build)
+
+    def _decode_layer(self, desc):
+        key = ("slot_decode", desc)
+
+        def build():
+            model = self.model
+
+            def impl(p, bc, x, pos, active):
+                self._count(key)
+                x_out, bc, _ = model._decode_block(p, desc, dict(bc), x, pos,
+                                                   0, active=active)
+                return x_out, bc
+            # the pool cache is rebound to the output every call — donate
+            # it (as the fused step does) so XLA updates the n_slots ×
+            # cache_len state in place instead of copying it per token
+            return self._jax.jit(impl, donate_argnums=(1,))
+        return self._fn(key, build)
+
+    def _decode_pre(self, desc):
+        key = ("slot_decode_pre", desc)
+
+        def build():
+            model, cfg = self.model, self.cfg
+
+            def impl(p, bc, x, pos, active):
+                self._count(key)
+                x_mid, h2, bc = model._decode_block_pre(
+                    p, desc, dict(bc), x, pos, 0, active=active)
+                B, S, d = h2.shape
+                gates, idx, _ = route(p["moe"], cfg.moe, h2.reshape(B * S, d))
+                return x_mid, h2, bc, gates, idx
+            return self._jax.jit(impl, donate_argnums=(1,))
+        return self._fn(key, build)
+
+    def _decode_post(self, desc):
+        key = ("slot_decode_post", desc)
+
+        def build():
+            model = self.model
+
+            def impl(p, bufs, row, bc, x_mid, h2, gates, idx, active):
+                self._count(key)
+                x_out, bc, counts = model._decode_block_post(
+                    p, desc, dict(bc), x_mid, h2, active=active,
+                    routing=(gates, idx), slot_weights=bufs, slot_ids=row)
+                counts = counts * active.astype(counts.dtype)[:, None]
+                return x_out, bc, counts
+            return self._jax.jit(impl, donate_argnums=(3,))
+        return self._fn(key, build)
+
+    def _decode_tail(self):
+        def build():
+            from repro.models.layers import apply_norm
+            jax, jnp, model = self._jax, self._jnp, self.model
+
+            def impl(params, x):
+                self._count("slot_tail")
+                x_last = apply_norm(params["final_norm"], x)
+                logits = model._logits(params, x_last)[:, 0]
+                return jnp.argmax(logits, axis=-1)
+            return jax.jit(impl)
+        return self._fn("slot_tail", build)
+
+    def decode(self, tok_np: np.ndarray, active_np: np.ndarray):
+        """One pooled decode step. Returns (new tokens (B,) np, counts
+        (n_moe, B, E) np — inactive rows zeroed, like the fused step)."""
+        jnp = self._jnp
+        tok = jnp.asarray(tok_np)
+        pos = jnp.asarray(self.pos)
+        active = jnp.asarray(active_np, bool)
+        x = self._decode_embed()(self.params, tok, pos)
+        counts_rows = []
+        for i, desc in enumerate(self.model.descs):
+            p, bc = self._layer_params[i], self.layer_caches[i]
+            if self._is_moe(i):
+                x_mid, h2, bc, gates, idx = self._decode_pre(desc)(
+                    p, bc, x, pos, active)
+                li = self._moe_li[i]
+                idx_np = np.asarray(idx)              # (B·1, k) — sync point
+                rows = np.asarray(active_np, bool)
+                used = (np.unique(idx_np[rows]) if rows.any()
+                        else np.empty(0, np.int64))
+                self._ensure(li, used)
+                row = jnp.asarray(self.slot_cache.table_row(li))
+                x, bc, cnts = self._decode_post(desc)(
+                    p, self.slot_cache.bufs, row, bc, x_mid, h2, gates, idx,
+                    active)
+                counts_rows.append(np.asarray(cnts))
+            else:
+                x, bc = self._decode_layer(desc)(p, bc, x, pos, active)
+            self.layer_caches[i] = bc
+        tok_new = np.asarray(self._decode_tail()(self.params, x))
+        self.pos = self.pos + np.asarray(active_np, np.int32)
+        return tok_new, np.stack(counts_rows)
+
+    # -- prefill -------------------------------------------------------------
+    def _prefill_embed(self, P):
+        key = ("slot_prefill_embed", P)
+
+        def build():
+            model = self.model
+
+            def impl(params, toks):
+                self._count(key)
+                return model._embed(params, {"tokens": toks})
+            return self._jax.jit(impl)
+        return self._fn(key, build)
+
+    def _prefill_layer(self, desc, P):
+        key = ("slot_prefill_layer", desc, P)
+
+        def build():
+            from repro.config import BLOCK_RWKV
+            model, cache_len = self.model, self.cache_len
+
+            def impl(p, x, positions, true_len):
+                self._count(key)
+                S = x.shape[1]
+                token_mask = (self._jnp.arange(S)[None, :]
+                              < true_len[:, None])
+                x_mid, h2, aux = model._apply_block_pre(p, desc, x, positions)
+                bc = model._block_cache(desc, 1, cache_len, 0)
+                bc = model._seed_mixer_cache(p, desc, bc, x, aux)
+                x_out, aux2 = model._apply_block_post(
+                    p, desc, x_mid, h2, capacity_factor=2.0,
+                    token_mask=token_mask)
+                if desc.kind == BLOCK_RWKV:
+                    bc["cm"] = aux2["rwkv_cm"].astype(bc["cm"].dtype)
+                return x_out, bc
+            return self._jax.jit(impl)
+        return self._fn(key, build)
+
+    def _prefill_pre(self, desc, P):
+        key = ("slot_prefill_pre", desc, P)
+
+        def build():
+            model, cfg, cache_len = self.model, self.cfg, self.cache_len
+
+            def impl(p, x, positions):
+                self._count(key)
+                x_mid, h2, aux = model._apply_block_pre(p, desc, x, positions)
+                bc = model._block_cache(desc, 1, cache_len, 0)
+                bc = model._seed_mixer_cache(p, desc, bc, x, aux)
+                B, S, d = h2.shape
+                gates, idx, _ = route(p["moe"], cfg.moe, h2.reshape(B * S, d))
+                return x_mid, h2, bc, gates, idx
+            return self._jax.jit(impl)
+        return self._fn(key, build)
+
+    def _prefill_post(self, desc, P):
+        key = ("slot_prefill_post", desc, P)
+
+        def build():
+            model = self.model
+
+            def impl(p, bufs, row, x_mid, h2, gates, idx, true_len):
+                self._count(key)
+                S = h2.shape[1]
+                token_mask = (self._jnp.arange(S)[None, :]
+                              < true_len[:, None])
+                x_out, aux = model._apply_block_post(
+                    p, desc, x_mid, h2, capacity_factor=2.0,
+                    token_mask=token_mask, routing=(gates, idx),
+                    slot_weights=bufs, slot_ids=row)
+                return x_out, aux["counts"]
+            return self._jax.jit(impl)
+        return self._fn(key, build)
+
+    def _prefill_tail(self, P):
+        key = ("slot_prefill_tail", P)
+
+        def build():
+            from repro.models.layers import apply_norm
+            jax, jnp, model = self._jax, self._jnp, self.model
+
+            def impl(params, x, true_len):
+                self._count(key)
+                x_last = jnp.take_along_axis(
+                    x, (true_len - 1)[:, None, None], axis=1)
+                x_last = apply_norm(params["final_norm"], x_last)
+                logits = model._logits(params, x_last)[:, 0]
+                return jnp.argmax(logits, axis=-1)
+            return jax.jit(impl)
+        return self._fn(key, build)
+
+    def _write_slot(self, desc):
+        key = ("slot_write", desc)
+
+        def build():
+            jax = self._jax
+
+            def impl(pool_bc, one_bc, slot):
+                self._count(key)
+                return jax.tree.map(
+                    lambda pb, ob: jax.lax.dynamic_update_slice_in_dim(
+                        pb, ob.astype(pb.dtype), slot, 0), pool_bc, one_bc)
+            return jax.jit(impl, donate_argnums=(0,))
+        return self._fn(key, build)
+
+    def prefill(self, padded_prompt: np.ndarray, true_len: int, slot: int):
+        """Stream one right-padded B=1 prompt through the stack and land
+        its per-layer caches in pool row ``slot``. Returns (first generated
+        token, counts (n_moe, E) np — pad tokens excluded)."""
+        jnp = self._jnp
+        P = len(padded_prompt)
+        toks = jnp.asarray(np.asarray(padded_prompt, np.int32)[None])
+        tl = jnp.asarray([true_len], jnp.int32)
+        slot_dev = jnp.asarray(slot, jnp.int32)
+        x, positions = self._prefill_embed(P)(self.params, toks)
+        counts_rows = []
+        for i, desc in enumerate(self.model.descs):
+            p = self._layer_params[i]
+            if self._is_moe(i):
+                x_mid, h2, bc_one, gates, idx = self._prefill_pre(desc, P)(
+                    p, x, positions)
+                li = self._moe_li[i]
+                idx_np = np.asarray(idx)[:true_len]   # real tokens only
+                self._ensure(li, np.unique(idx_np))
+                row = jnp.asarray(self.slot_cache.table_row(li))
+                x, cnts = self._prefill_post(desc, P)(
+                    p, self.slot_cache.bufs, row, x_mid, h2, gates, idx, tl)
+                counts_rows.append(np.asarray(cnts)[0])
+            else:
+                x, bc_one = self._prefill_layer(desc, P)(p, x, positions, tl)
+            self.layer_caches[i] = self._write_slot(desc)(
+                self.layer_caches[i], bc_one, slot_dev)
+        tok0 = int(np.asarray(
+            self._prefill_tail(P)(self.params, x, tl))[0])
+        self.pos[slot] = true_len
+        return tok0, np.stack(counts_rows)

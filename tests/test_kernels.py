@@ -34,6 +34,27 @@ def test_moe_ffn_kernel(E, C, d, f, dtype, act):
                                np.asarray(y_ref, np.float32), **_tol(dtype))
 
 
+def test_moe_ffn_slots_kernel_matches_dense():
+    """Slot-indexed dispatch (expert slot cache): gathering per-slot
+    weights through a permuted expert→slot table is bit-identical to the
+    dense kernel on the same weights."""
+    from repro.kernels.moe_ffn import moe_ffn_slots
+    E, C, d, f = 4, 64, 128, 256
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    xg = jax.random.normal(ks[0], (E, C, d), jnp.float32)
+    wg = jax.random.normal(ks[1], (E, d, f), jnp.float32) * 0.05
+    wu = jax.random.normal(ks[2], (E, d, f), jnp.float32) * 0.05
+    wd = jax.random.normal(ks[3], (E, f, d), jnp.float32) * 0.05
+    y_dense = moe_ffn(xg, wg, wu, wd, act="swiglu", block_c=64,
+                      block_f=128, interpret=True)
+    perm = np.array([2, 0, 3, 1])                    # slot s holds expert perm[s]
+    slots = {"w_gate": wg[perm], "w_up": wu[perm], "w_down": wd[perm]}
+    slot_ids = jnp.asarray(np.argsort(perm), jnp.int32)
+    y_slots = moe_ffn_slots(xg, slots, slot_ids, act="swiglu", block_c=64,
+                            block_f=128, interpret=True)
+    assert np.array_equal(np.asarray(y_dense), np.asarray(y_slots))
+
+
 @pytest.mark.parametrize("B,H,Hkv,hd,S", [(1, 4, 4, 64, 256),
                                           (2, 8, 2, 64, 512),
                                           (1, 16, 1, 128, 256)])
