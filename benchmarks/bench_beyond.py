@@ -20,8 +20,9 @@ from repro.configs import get_config
 VARIANTS = [
     ("paper-faithful", dict()),
     ("+4links", dict(n_gpu_links=4)),
-    ("+fp16-wire", dict(transfer_bytes_factor=0.5)),
-    ("+4links+fp16", dict(n_gpu_links=4, transfer_bytes_factor=0.5)),
+    ("+fp16-wire", dict(transfer_dtype="fp16")),
+    ("+int8-wire", dict(transfer_dtype="int8")),
+    ("+4links+fp16", dict(n_gpu_links=4, transfer_dtype="fp16")),
 ]
 
 

@@ -39,7 +39,8 @@ def run_scenario(scenario, quick=True, arch="switch-large-128", **kw):
 
 
 def main(quick=True, scheduling="continuous", policy="prefill",
-         arch="switch-large-128", ssd_gbps=None, dram_cache=None):
+         arch="switch-large-128", ssd_gbps=None, dram_cache=None,
+         transfer_dtype="fp32"):
     n = 30 if quick else 100
     modes = ["static", "continuous"] if scheduling == "both" else [scheduling]
     # cache-only = the demand-fetch ablation (same activation-aware cache,
@@ -49,7 +50,8 @@ def main(quick=True, scheduling="continuous", policy="prefill",
             for mode in modes:
                 eng = build_engine(arch, system,
                                    scheduling=mode, policy=policy,
-                                   ssd_gbps=ssd_gbps, dram_slots=dram_cache)
+                                   ssd_gbps=ssd_gbps, dram_slots=dram_cache,
+                                   transfer_dtype=transfer_dtype)
                 reqs = run_workload(eng, n_requests=n, rps=rps, seed=11)
                 stats = eng.stats()
                 lat = np.array(eng.token_latencies) * 1000
@@ -83,6 +85,9 @@ if __name__ == "__main__":
     ap.add_argument("--scenario", default=None,
                     choices=["coldstart", "drift"],
                     help="EAMC-lifecycle replay instead of the load CDFs")
+    ap.add_argument("--transfer-dtype", default="fp32",
+                    choices=["fp32", "fp16", "int8"],
+                    help="expert wire dtype for the simulated transfers")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also dump the emitted rows as a JSON document "
                          "('-' = stdout); the CI BENCH tier asserts it "
@@ -109,6 +114,6 @@ if __name__ == "__main__":
                   "paper-scale Fig 5 CDFs")
         main(quick=not args.full, scheduling=args.scheduling,
              policy=args.policy, arch=args.arch, ssd_gbps=args.ssd_gbps,
-             dram_cache=args.dram_cache)
+             dram_cache=args.dram_cache, transfer_dtype=args.transfer_dtype)
     if args.json:
         dump_json(args.json)

@@ -82,6 +82,34 @@ def run_rf_sweep(fractions, quick=True, arch_id="switch-base-128",
                  f"demand={stats['demand_fetches']}")
 
 
+def run_wire_sweep(dtypes, quick=True, arch_id="switch-base-128",
+                   resident_fraction=0.5, ssd_gbps=None, dram_cache=None):
+    """Per-token latency and upload traffic vs expert wire dtype at a
+    fixed resident fraction (DESIGN.md §7): the same workload and routing
+    seeds under fp32/fp16/int8 transfers. Narrow wires shrink every
+    simulated transfer, so total upload bytes are monotonically
+    non-increasing along the sweep and transfer-bound latency improves —
+    the CI BENCH tier asserts both."""
+    rps_list = [0.5, 2.0] if quick else [0.5, 1.0, 2.0, 4.0]
+    n = 24 if quick else 80
+    for dt in dtypes:
+        for rps in rps_list:
+            eng = build_engine(arch_id, "moe-infinity",
+                               resident_fraction=resident_fraction,
+                               transfer_dtype=dt, ssd_gbps=ssd_gbps,
+                               dram_slots=dram_cache)
+            run_workload(eng, n_requests=n, rps=rps)
+            stats = eng.stats()
+            tag = f"wire-sweep/{arch_id}/rf={resident_fraction}/{dt}" \
+                f"/rps={rps}"
+            emit(tag + "/tok-lat",
+                 round(stats["mean_token_latency"] * 1000, 2), "ms/token",
+                 f"stall={stats['stall_time']:.3f}s "
+                 f"demand={stats['demand_fetches']}")
+            emit(tag + "/upload-bytes", int(stats["pcie_bytes"]), "B",
+                 f"per-expert={eng.offload.sim.expert_bytes}")
+
+
 def main(quick=True, scheduling="continuous", policy="prefill",
          ssd_gbps=None, dram_cache=None):
     rps_list = [0.5, 2.0] if quick else [0.5, 1.0, 2.0, 4.0, 8.0]
@@ -152,6 +180,12 @@ if __name__ == "__main__":
                     help="comma-separated device expert-slot fractions "
                          "(e.g. 0.1,0.2,0.5): sweep per-token latency vs "
                          "resident fraction instead of the Fig-4 matrix")
+    ap.add_argument("--transfer-dtype", default=None,
+                    help="comma-separated expert wire dtypes (e.g. "
+                         "fp32,fp16,int8): sweep per-token latency and "
+                         "upload bytes vs wire dtype at a fixed resident "
+                         "fraction (0.5, or the first --resident-fraction "
+                         "value)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also dump the emitted rows as a JSON document "
                          "('-' = stdout); the CI BENCH tier asserts it "
@@ -159,7 +193,16 @@ if __name__ == "__main__":
     args = ap.parse_args()
     if args.json:
         start_json_capture()
-    if args.resident_fraction:
+    if args.transfer_dtype:
+        dtypes = args.transfer_dtype.split(",")
+        rf = (float(args.resident_fraction.split(",")[0])
+              if args.resident_fraction else 0.5)
+        if not args.full:
+            print("# quick wire-dtype sweep (1 model x 2 rates); pass "
+                  "--full for 4 rates")
+        run_wire_sweep(dtypes, quick=not args.full, resident_fraction=rf,
+                       ssd_gbps=args.ssd_gbps, dram_cache=args.dram_cache)
+    elif args.resident_fraction:
         fractions = [float(x) for x in args.resident_fraction.split(",")]
         if not args.full:
             print("# quick rf sweep (1 model x 2 rates); pass --full for "

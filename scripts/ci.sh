@@ -74,14 +74,25 @@ if [ -n "${SMOKE:-}" ]; then
         python -m repro.launch.serve --reduced --requests 4 \
         --resident-fraction 1.0 | tee "$SLOT_TMP/full.log" \
         | log_tee serve_rf10.log
-    python - "$SLOT_TMP/half.log" "$SLOT_TMP/full.log" <<'PY'
+    # double-buffered (default) vs PR-5 fenced schedule: same rf=0.5 fp32
+    # run — the overlap schedule must not change a single token
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout "${SMOKE_TIMEOUT:-300}" \
+        python -m repro.launch.serve --reduced --requests 4 \
+        --resident-fraction 0.5 --fenced-uploads \
+        | tee "$SLOT_TMP/fenced.log" | log_tee serve_rf05_fenced.log
+    python - "$SLOT_TMP/half.log" "$SLOT_TMP/full.log" \
+        "$SLOT_TMP/fenced.log" <<'PY'
 import re, sys
 
 half, full = open(sys.argv[1]).read(), open(sys.argv[2]).read()
+fenced = open(sys.argv[3]).read()
 toks_h = re.findall(r"toks=([\d,]+)", half)
 toks_f = re.findall(r"toks=([\d,]+)", full)
+toks_x = re.findall(r"toks=([\d,]+)", fenced)
 assert toks_h and toks_h == toks_f, \
     f"slot-cache token output diverged from all-resident: {toks_h} vs {toks_f}"
+assert toks_x == toks_h, \
+    f"double-buffered schedule diverged from fenced: {toks_h} vs {toks_x}"
 m = re.search(r"slots: resident=(\d+)/(\d+) hit-ratio=[0-9.]+ hits=(\d+) "
               r"misses=\d+ demand-uploads=(\d+)", half)
 assert m, "no slot-cache report line in the rf=0.5 run"
@@ -89,8 +100,10 @@ res, total, hits, demand = map(int, m.groups())
 assert res < total, f"rf=0.5 kept all {total} experts resident"
 assert hits > 0, "slot cache reported zero hits"
 assert demand > 0, "slot cache reported zero demand uploads"
+assert "schedule=overlap" in half and "schedule=fenced" in fenced, \
+    "serve report missing the upload-schedule tag"
 print(f"ci.sh: slot cache OK (resident {res}/{total}, hits={hits}, "
-      f"demand-uploads={demand}, tokens bit-identical)")
+      f"demand-uploads={demand}, overlap==fenced, tokens bit-identical)")
 PY
 
     echo "ci.sh: SMOKE tier — online EAMC cold start + save/load warm restart"
@@ -132,7 +145,12 @@ if [ -n "${BENCH:-}" ]; then
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout "${BENCH_TIMEOUT:-600}" \
         python -m benchmarks.bench_latency_cdf --scheduling continuous \
         --json "$BENCH_TMP/cdf.json" | log_tee bench_latency_cdf.log
-    python - "$BENCH_TMP/rps.json" "$BENCH_TMP/cdf.json" <<'PY'
+    echo "ci.sh: BENCH tier — wire-dtype sweep (fp32/fp16/int8 transfers)"
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout "${BENCH_TIMEOUT:-600}" \
+        python -m benchmarks.bench_rps --transfer-dtype fp32,fp16,int8 \
+        --json "$BENCH_TMP/wire.json" | log_tee bench_wire_sweep.log
+    python - "$BENCH_TMP/rps.json" "$BENCH_TMP/cdf.json" \
+        "$BENCH_TMP/wire.json" <<'PY'
 import json, sys
 
 for p in sys.argv[1:]:
@@ -143,6 +161,22 @@ for p in sys.argv[1:]:
     for r in rows:
         assert {"name", "value", "unit", "derived"} <= set(r), f"{p}: {r}"
     print(f"ci.sh: {p} OK ({len(rows)} rows)")
+
+# wire sweep: narrower transfers must never ship MORE bytes on the same
+# workload — upload bytes monotonically non-increasing along fp32→fp16→int8
+# at every request rate
+with open(sys.argv[3]) as f:
+    rows = {r["name"]: r["value"] for r in json.load(f)["rows"]}
+rates = sorted({n.split("rps=")[1].split("/")[0]
+                for n in rows if "/upload-bytes" in n})
+assert rates, "wire sweep emitted no upload-bytes rows"
+for rps in rates:
+    seq = [rows[n] for dt in ("fp32", "fp16", "int8")
+           for n in (f"wire-sweep/switch-base-128/rf=0.5/{dt}"
+                     f"/rps={rps}/upload-bytes",)]
+    assert seq[0] >= seq[1] >= seq[2], \
+        f"upload bytes not monotone at rps={rps}: {seq}"
+    print(f"ci.sh: wire sweep rps={rps} upload-bytes {seq} monotone OK")
 PY
 fi
 

@@ -43,7 +43,13 @@ class OffloadConfig:
     max_inflight_queue: int = 0          # 0 = unbounded
     demand_overhead_s: float = 0.0       # per-demand fault overhead (UM)
     n_gpu_links: int = 1                 # parallel DRAM→device links (§7)
-    transfer_bytes_factor: float = 1.0   # <1.0 = quantized transfers
+    # quantized expert wire (DESIGN.md §7): the dtype experts ship in.
+    # ``wire_expert_bytes`` is the per-expert transfer size the simulator
+    # charges — None derives it analytically from the dtype (incl. int8
+    # scale rows) via `quant.wire_itemsize`; model mode overrides it with
+    # the host store's measured wire image size so sim bytes == real bytes.
+    transfer_dtype: str = "fp32"
+    wire_expert_bytes: Optional[int] = None
     # three-tier pipeline: weight prefetch priorities by the miss cost of
     # the expert's current tier (SSD residents stage SSD→DRAM early). A
     # no-op when the SSD hop is free, so False only exists for the
@@ -104,9 +110,17 @@ class OffloadEngine:
             ReuseAwareDRAMCache(self.ctx)
             if cfg.cache_policy == "moe-infinity" else LRUCache())
 
+        from repro.core import quant
+        wire_bytes = cfg.wire_expert_bytes
+        if wire_bytes is None:
+            # expert_bytes is the master image; scale it by the wire
+            # itemsize ratio (scale-row overhead needs the arch — callers
+            # that know it pass wire_expert_bytes explicitly)
+            wire_bytes = int(cfg.expert_bytes
+                             * quant.wire_itemsize(cfg.transfer_dtype) / 4)
         self.sim = MemSim(
             cfg.hw,
-            expert_bytes=int(cfg.expert_bytes * cfg.transfer_bytes_factor),
+            expert_bytes=wire_bytes,
             on_arrive=self._on_arrive, admit=self._admit,
             demand_overhead=cfg.demand_overhead_s,
             n_gpu_links=cfg.n_gpu_links)

@@ -87,6 +87,103 @@ def moe_ffn(xg, w_gate, w_up, w_down, *, act: str = "swiglu",
     )(*operands)
 
 
+def _quant_kernel(refs, *, act: str, bf: int, gated: bool, scaled: bool):
+    """Dequantizing variant: weight refs arrive in a narrow wire dtype
+    (fp16/int8) plus optional per-output-channel fp32 scale refs, and are
+    widened to fp32 *inside* the kernel, right before each GEMM — so the
+    wire dtype never touches the math (compute accumulates fp32, like the
+    dense kernel) and VMEM holds the narrow blocks, not widened copies."""
+    it = iter(refs)
+    x_ref = next(it)
+    wg_ref = next(it) if gated else None
+    wu_ref, wd_ref = next(it), next(it)
+    sg_ref = next(it) if (gated and scaled) else None
+    su_ref = next(it) if scaled else None
+    sd_ref = next(it) if scaled else None
+    y_ref = next(it)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    def deq(w_ref, s_ref):                  # (1, a, b) wire + (1, b) scales
+        w = w_ref[0].astype(jnp.float32)
+        return w if s_ref is None else w * s_ref[0][None, :]
+
+    x = x_ref[0].astype(jnp.float32)        # (bc, d)
+    up = jnp.dot(x, deq(wu_ref, su_ref), preferred_element_type=jnp.float32)
+    if wg_ref is not None:
+        gate = jnp.dot(x, deq(wg_ref, sg_ref),
+                       preferred_element_type=jnp.float32)
+        if act == "swiglu":
+            h = jax.nn.silu(gate) * up
+        else:                               # geglu
+            h = jax.nn.gelu(gate, approximate=True) * up
+    elif act == "relu2":
+        h = jnp.square(jax.nn.relu(up))
+    else:                                   # gelu
+        h = jax.nn.gelu(up, approximate=True)
+    y_ref[...] += jnp.dot(h, deq(wd_ref, sd_ref),
+                          preferred_element_type=jnp.float32
+                          )[None].astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("act", "block_c", "block_f",
+                                             "interpret"))
+def moe_ffn_quant(xg, w_gate, w_up, w_down, sg=None, su=None, sd=None, *,
+                  act: str = "swiglu", block_c: int = 128,
+                  block_f: int = 512, interpret: bool = False):
+    """Grouped expert FFN over wire-dtype weights (DESIGN.md §7).
+
+    ``w_*``: (E, d, f)/(E, f, d) in fp16 or int8; ``su``/``sg``: (E, f) and
+    ``sd``: (E, d) fp32 per-output-channel scales (int8 only — None for
+    fp16). Dequantization happens on-device inside the kernel; with fp32
+    weights and no scales this *delegates* to :func:`moe_ffn`, so the fp32
+    wire path is literally the dense kernel (bit-identity by construction).
+    """
+    if su is None and w_up.dtype == xg.dtype:
+        return moe_ffn(xg, w_gate, w_up, w_down, act=act, block_c=block_c,
+                       block_f=block_f, interpret=interpret)
+    E, C, d = xg.shape
+    f = w_up.shape[2]
+    bc = min(block_c, C)
+    bf = min(block_f, f)
+    assert C % bc == 0 and f % bf == 0, (C, bc, f, bf)
+    grid = (E, C // bc, f // bf)
+    gated = w_gate is not None
+    scaled = su is not None
+
+    w_spec = pl.BlockSpec((1, d, bf), lambda e, i, j: (e, 0, j))
+    in_specs = [pl.BlockSpec((1, bc, d), lambda e, i, j: (e, i, 0))]
+    operands = [xg]
+    if gated:
+        in_specs.append(w_spec)
+        operands.append(w_gate)
+    in_specs += [w_spec, pl.BlockSpec((1, bf, d), lambda e, i, j: (e, j, 0))]
+    operands += [w_up, w_down]
+    if scaled:
+        f_scale = pl.BlockSpec((1, bf), lambda e, i, j: (e, j))
+        d_scale = pl.BlockSpec((1, d), lambda e, i, j: (e, 0))
+        if gated:
+            in_specs.append(f_scale)
+            operands.append(sg)
+        in_specs += [f_scale, d_scale]
+        operands += [su, sd]
+
+    kernel = functools.partial(
+        lambda *refs, **kw: _quant_kernel(refs, **kw),
+        act=act, bf=bf, gated=gated, scaled=scaled)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bc, d), lambda e, i, j: (e, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((E, C, d), xg.dtype),
+        interpret=interpret,
+    )(*operands)
+
+
 def moe_ffn_slots(xg, slot_weights, slot_ids, *, act: str = "swiglu",
                   block_c: int = 128, block_f: int = 512,
                   interpret: bool = False):
@@ -100,10 +197,19 @@ def moe_ffn_slots(xg, slot_weights, slot_ids, *, act: str = "swiglu",
     kernel's expert-major grid expects, so the grid/BlockSpec structure —
     and the expert-parallel sharding story on the leading axis — is
     unchanged from the dense path. Numerically identical to `moe_ffn` on
-    the dense weights the slots were uploaded from (bit-equal gather)."""
-    wg = (jnp.take(slot_weights["w_gate"], slot_ids, axis=0)
-          if "w_gate" in slot_weights else None)
-    wu = jnp.take(slot_weights["w_up"], slot_ids, axis=0)
-    wd = jnp.take(slot_weights["w_down"], slot_ids, axis=0)
-    return moe_ffn(xg, wg, wu, wd, act=act, block_c=block_c,
-                   block_f=block_f, interpret=interpret)
+    the dense weights the slots were uploaded from (bit-equal gather).
+
+    Wire-dtype buffers (DESIGN.md §7): when the slot cache streams fp16 or
+    int8, ``slot_weights`` holds narrow buffers plus ``<name>_scale``
+    fp32 per-output-channel scales (int8); the gather stays in the wire
+    dtype (cheap) and :func:`moe_ffn_quant` dequantizes inside the grouped
+    GEMM."""
+    def take(name):
+        return (jnp.take(slot_weights[name], slot_ids, axis=0)
+                if name in slot_weights else None)
+    wg, wu, wd = take("w_gate"), take("w_up"), take("w_down")
+    sg, su, sd = take("w_gate_scale"), take("w_up_scale"), \
+        take("w_down_scale")
+    return moe_ffn_quant(xg, wg, wu, wd, sg, su, sd, act=act,
+                         block_c=block_c, block_f=block_f,
+                         interpret=interpret)

@@ -71,6 +71,17 @@ def main(argv=None):
     ap.add_argument("--weight-slots", type=int, default=None,
                     help="explicit device expert-slot count (overrides "
                          "--resident-fraction)")
+    ap.add_argument("--transfer-dtype", default="fp32",
+                    choices=["fp32", "fp16", "int8"],
+                    help="expert wire dtype: what the slot cache ships and "
+                         "the simulator charges per transfer (int8 adds "
+                         "per-output-channel fp32 scales; dequant happens "
+                         "on device in the consuming kernel)")
+    ap.add_argument("--fenced-uploads", action="store_true",
+                    help="restore the PR-5 slot-cache schedule: all "
+                         "prefetch uploads at the iteration boundary and a "
+                         "wall-clock fence on every demand miss (default "
+                         "is the double-buffered overlap schedule)")
     ap.add_argument("--ssd-gbps", type=float, default=None,
                     help="SSD→DRAM bandwidth in GB/s (e.g. 3.5 for a "
                          "consumer NVMe; 'inf' disables the SSD tier)")
@@ -133,7 +144,9 @@ def main(argv=None):
                      keep_request_eams=False,
                      eamc_online=args.eamc_online,
                      resident_fraction=args.resident_fraction,
-                     n_weight_slots=args.weight_slots),
+                     n_weight_slots=args.weight_slots,
+                     transfer_dtype=args.transfer_dtype,
+                     fenced_uploads=args.fenced_uploads),
         model, params, eamc=eamc,
         cache_len=args.prompt_len + args.max_new)
 
@@ -187,7 +200,11 @@ def main(argv=None):
               f"evictions={stats['slot_evictions']} "
               f"uploaded={stats['upload_bytes']/1e6:.1f}MB "
               f"demand-stall={stats['demand_stall_s']*1e3:.1f}ms "
-              f"({stats['demand_stall_per_token_s']*1e3:.2f}ms/token)")
+              f"({stats['demand_stall_per_token_s']*1e3:.2f}ms/token) "
+              f"wire={stats['transfer_dtype']} "
+              f"({stats['wire_expert_bytes']}B/expert, "
+              f"sim={stats['sim_expert_bytes']}B) "
+              f"schedule={'fenced' if args.fenced_uploads else 'overlap'}")
     else:
         print("slots: all-resident (resident-fraction 1.0)")
     learned = stats["eamc_online_inserts"] + stats["eamc_online_merges"]

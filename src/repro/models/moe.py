@@ -98,11 +98,26 @@ def gather_slot_weights(p, slot_weights, slot_ids):
     this layer. Non-resident experts must be clamped to a valid slot by the
     caller; their weights are garbage but harmless — an expert no real token
     routes to contributes nothing to the output (zero gate / empty capacity
-    block), so only *activated* experts need live slots."""
+    block), so only *activated* experts need live slots.
+
+    Wire dtypes (DESIGN.md §7): when the slot cache streams fp16/int8, the
+    buffers are narrow and int8 ships with ``<name>_scale`` fp32
+    per-output-channel rows. The gather stays in the wire dtype (cheap:
+    E rows, not n_slots) and dequantization happens here, in-jit on device
+    — ``q.astype(f32) * scale`` broadcast over the input axis — so compute
+    downstream is fp32 regardless of the wire. The fp32 wire path takes
+    the exact PR-5 gather (no cast, no scale): bit-identity preserved."""
     p = dict(p)
     for name in ("w_gate", "w_up", "w_down"):
         if name in slot_weights:
-            p[name] = jnp.take(slot_weights[name], slot_ids, axis=0)
+            w = jnp.take(slot_weights[name], slot_ids, axis=0)
+            sname = name + "_scale"
+            if sname in slot_weights:
+                s = jnp.take(slot_weights[sname], slot_ids, axis=0)
+                w = w.astype(jnp.float32) * s[:, None, :]
+            elif w.dtype == jnp.float16:
+                w = w.astype(jnp.float32)
+            p[name] = w
         else:
             p.pop(name, None)
     return p

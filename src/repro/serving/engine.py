@@ -31,6 +31,7 @@ import numpy as np
 
 from repro.config import ArchConfig
 from repro.core.eam import EAMC
+from repro.core import quant
 from repro.core.memsim import DRAM, HWConfig, PAPER_8GPU, SSD
 from repro.core.offload import OffloadConfig, OffloadEngine
 from repro.core.tracer import SequenceTracer
@@ -93,7 +94,18 @@ class EngineConfig:
     keep_request_eams: bool = True
     demand_overhead_s: float = 0.0   # UM-style per-fault handling overhead
     n_gpu_links: int = 1             # parallel DRAM→device links
-    transfer_bytes_factor: float = 1.0  # <1 = quantized expert transfers
+    # expert wire dtype (DESIGN.md §7): fp32 | fp16 | int8. One value
+    # drives BOTH the simulator's per-transfer byte model (analytic, incl.
+    # int8 scale rows) and — in model mode — the real slot-cache wire
+    # (quantized host store, narrow device buffers, in-kernel dequant), so
+    # the two byte accountings can never disagree.
+    transfer_dtype: str = "fp32"
+    # True restores the PR-5 upload schedule in slot mode: every prefetch
+    # upload issued at the iteration boundary and every demand miss blocked
+    # through an explicit wall-clock fence (the double-buffered default
+    # stages uploads while the previous layer's post computes and lets the
+    # consuming kernel's data dependence do the blocking)
+    fenced_uploads: bool = False
     tier_aware: bool = True          # SSD-tier-aware prefetch priorities
     # online EAMC lifecycle: learn completed sequences' EAMs into the
     # collection and reconstruct on drift (DESIGN.md §4)
@@ -139,7 +151,9 @@ class StepEngine:
             prefetch=cfg.prefetch,
             demand_overhead_s=cfg.demand_overhead_s,
             n_gpu_links=cfg.n_gpu_links,
-            transfer_bytes_factor=cfg.transfer_bytes_factor,
+            transfer_dtype=cfg.transfer_dtype,
+            wire_expert_bytes=quant.sim_wire_expert_bytes(
+                arch, cfg.bytes_per_param, cfg.transfer_dtype),
             tier_aware=cfg.tier_aware,
             eamc_online=cfg.eamc_online,
             eamc_drift_threshold=cfg.eamc_drift_threshold,
@@ -489,9 +503,17 @@ class JaxModelServer(StepEngine):
                 n_pool_slots=self.n_slots,
                 n_weight_slots=n_weight_slots,
                 victim_fn=self.offload.gpu_cache.policy.victim,
-                compile_counts=self.compile_counts)
+                compile_counts=self.compile_counts,
+                transfer_dtype=cfg.transfer_dtype,
+                fenced=cfg.fenced_uploads)
             # the device now only holds the stripped tree + the slot buffers
             self.params = self.slot_runtime.params
+            # sim↔real crosswalk: the simulator charges exactly the bytes
+            # the host store actually ships per expert (the analytic value
+            # assumed ``bytes_per_param`` masters; the store measures its
+            # real wire image, scale rows included)
+            self.offload.sim.expert_bytes = \
+                self.slot_runtime.store.wire_expert_bytes
 
     @staticmethod
     def _resolve_weight_slots(cfg: EngineConfig):
@@ -664,6 +686,10 @@ class JaxModelServer(StepEngine):
         if self.slot_runtime is not None:
             rs = self.slot_runtime.slot_cache.stats()
             s.update(rs)
+            # crosswalk invariant (asserted by tests/test_quant_stream.py):
+            # the simulator charges per transfer exactly what one real
+            # upload ships, under every --transfer-dtype
+            s["sim_expert_bytes"] = self.offload.sim.expert_bytes
             tot = rs["slot_hits"] + rs["slot_misses"]
             s["slot_hit_ratio"] = rs["slot_hits"] / tot if tot else 1.0
             toks = max(1, self.prefill_tokens + self.decode_tokens)

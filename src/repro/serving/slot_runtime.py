@@ -21,6 +21,20 @@ iteration boundaries overlap the layers still executing in front of them —
 the fence is the data dependence of the first ``post`` that consumes the
 updated buffer, exactly "block at use time".
 
+Double-buffered schedule (DESIGN.md §7, default): the iteration boundary
+no longer issues every prefetch upload up front. `sync_residency` applies
+evictions, stages the *first* MoE layer's uploads, and files the rest in a
+per-layer plan; the walk then stages layer ``li+1``'s planned uploads
+immediately after dispatching layer ``li``'s ``post`` — the host→device
+copies run while ``post`` computes. Every staged upload lands in the slot
+cache's staging set (a second buffer set) and is spliced into the slot
+buffers by ``commit()`` right before the next ``post`` dispatch, so an
+in-flight kernel never observes a slot mutating under it, and demand
+misses block only through the data dependence of the kernel that consumes
+the committed buffers. ``fenced=True`` restores the PR-5 schedule (stage
+everything at the boundary, wall-clock fence on every demand miss) for the
+bit-identity smoke comparison.
+
 Numerics are bit-identical to the fused path: the per-layer jits run the
 same ops on the same values (verified by tests/test_slot_cache.py), the
 router is evaluated once per layer in ``pre`` and its (gates, idx) handed
@@ -47,7 +61,8 @@ class SlotStreamRuntime:
     streaming expert weights through an :class:`ExpertSlotCache`."""
 
     def __init__(self, model, params, *, n_pool_slots: int,
-                 n_weight_slots: int, victim_fn=None, compile_counts=None):
+                 n_weight_slots: int, victim_fn=None, compile_counts=None,
+                 transfer_dtype: str = "fp32", fenced: bool = False):
         import jax
         import jax.numpy as jnp
         if model.cfg.is_encoder_decoder:
@@ -57,9 +72,13 @@ class SlotStreamRuntime:
         self._jax, self._jnp = jax, jnp
         self.model = model
         self.cfg = model.cfg
-        self.store = HostExpertStore(model, params)
+        self.store = HostExpertStore(model, params,
+                                     transfer_dtype=transfer_dtype)
         self.params = self.store.stripped_params
-        self.slot_cache = ExpertSlotCache(self.store, n_weight_slots)
+        self.slot_cache = ExpertSlotCache(self.store, n_weight_slots,
+                                          fenced=fenced)
+        self.fenced = bool(fenced)
+        self._upload_plan: Dict[int, List] = {}
         self.victim_fn = victim_fn
         self.n_pool_slots = n_pool_slots
         self.compile_counts = (compile_counts if compile_counts is not None
@@ -97,8 +116,44 @@ class SlotStreamRuntime:
     def sync_residency(self, target_keys) -> int:
         """Iteration-boundary reconciliation: the OffloadEngine's GPU-cache
         verdicts (admissions, prefetch arrivals, evictions) become real
-        async uploads/slot releases."""
-        return self.slot_cache.sync(target_keys)
+        async uploads/slot releases.
+
+        Double-buffered mode: evictions apply now, the first MoE layer's
+        uploads are staged now (they overlap the embed + any leading dense
+        layers), and the remaining uploads are *planned* per layer — the
+        walk stages layer ``li+1``'s plan while layer ``li``'s ``post``
+        computes (:meth:`_stage_plan`). Fenced mode stages everything at
+        the boundary, like PR 5."""
+        if self.fenced:
+            return self.slot_cache.sync(target_keys)
+        sc = self.slot_cache
+        target = set(target_keys)
+        for key in sc.resident:
+            if key not in target:
+                sc.evict(key)
+        plan: Dict[int, List] = {}
+        for key in sorted(target):
+            if key not in sc:
+                plan.setdefault(key[0], []).append(key)
+        self._upload_plan = plan
+        return self._stage_plan(0)
+
+    def _stage_plan(self, li: int) -> int:
+        """Stage the planned prefetch-class uploads for MoE layer ``li``
+        (issued while the previous layer's ``post`` computes)."""
+        keys = self._upload_plan.pop(li, None)
+        if not keys:
+            return 0
+        return self.slot_cache.prefetch(keys)
+
+    def flush_pending(self) -> None:
+        """Stage any still-planned uploads and commit the staging set —
+        residency then exactly matches the last sync's verdicts (used at
+        drain boundaries and by the residency-consistency checks)."""
+        for li in sorted(self._upload_plan):
+            self.slot_cache.prefetch(self._upload_plan[li])
+        self._upload_plan.clear()
+        self.slot_cache.commit()
 
     # -- jit bookkeeping -----------------------------------------------------
     def _count(self, key) -> None:
@@ -217,9 +272,16 @@ class SlotStreamRuntime:
                         else np.empty(0, np.int64))
                 self._ensure(li, used)
                 row = jnp.asarray(self.slot_cache.table_row(li))
+                # splice staged uploads in *now*: post is dispatched against
+                # the committed value, while anything still executing keeps
+                # the buffers it was given (no-alias by construction)
+                bufs = self.slot_cache.commit()
                 x, bc, cnts = self._decode_post(desc)(
-                    p, self.slot_cache.bufs, row, bc, x_mid, h2, gates, idx,
+                    p, bufs, row, bc, x_mid, h2, gates, idx,
                     active)
+                # double-buffered overlap: issue the next MoE layer's
+                # planned uploads while this post computes
+                self._stage_plan(li + 1)
                 counts_rows.append(np.asarray(cnts))
             else:
                 x, bc = self._decode_layer(desc)(p, bc, x, pos, active)
@@ -352,8 +414,10 @@ class SlotStreamRuntime:
                 idx_np = np.asarray(idx)[:true_len]   # real tokens only
                 self._ensure(li, np.unique(idx_np))
                 row = jnp.asarray(self.slot_cache.table_row(li))
+                bufs = self.slot_cache.commit()
                 x, cnts = self._prefill_post(desc, P)(
-                    p, self.slot_cache.bufs, row, x_mid, h2, gates, idx, tl)
+                    p, bufs, row, x_mid, h2, gates, idx, tl)
+                self._stage_plan(li + 1)
                 counts_rows.append(np.asarray(cnts)[0])
             else:
                 x, bc_one = self._prefill_layer(desc, P)(p, x, positions, tl)
