@@ -110,6 +110,51 @@ def run_wire_sweep(dtypes, quick=True, arch_id="switch-base-128",
                  f"per-expert={eng.offload.sim.expert_bytes}")
 
 
+def run_device_sweep(devices, quick=True, arch_id="switch-base-128",
+                     resident_fraction=0.5, ssd_gbps=None, dram_cache=None):
+    """Per-token latency, aggregate upload bandwidth, and demand-stall per
+    token vs expert-parallel device count at a fixed resident fraction
+    (DESIGN.md §8): the same workload and routing seeds served over a
+    D-device mesh. Each device homes E/D experts behind its own host→device
+    link, so aggregate upload bandwidth scales with D and transfer-bound
+    stall per token shrinks at rf<1 — the CI BENCH tier asserts the trend
+    is monotone along the sweep."""
+    rps_list = [0.5, 2.0] if quick else [0.5, 1.0, 2.0, 4.0]
+    n = 24 if quick else 80
+    stall = {}
+    for d in devices:
+        for rps in rps_list:
+            eng = build_engine(arch_id, "moe-infinity",
+                               resident_fraction=resident_fraction,
+                               n_devices=d, ssd_gbps=ssd_gbps,
+                               dram_slots=dram_cache)
+            run_workload(eng, n_requests=n, rps=rps)
+            stats = eng.stats()
+            clock = max(eng.offload.sim.clock, 1e-9)
+            n_tok = max(1, len(eng.token_latencies))
+            stall[(d, rps)] = stats["stall_time"] / n_tok * 1000
+            tag = (f"device-sweep/{arch_id}/rf={resident_fraction}"
+                   f"/D={d}/rps={rps}")
+            emit(tag + "/tok-lat",
+                 round(stats["mean_token_latency"] * 1000, 2), "ms/token",
+                 f"demand={stats['demand_fetches']}")
+            emit(tag + "/upload-gbps",
+                 round(stats["pcie_bytes"] / clock / 1e9, 3), "GB/s",
+                 f"links={stats.get('n_gpu_links', 1)}")
+            emit(tag + "/stall-per-token", round(stall[(d, rps)], 4),
+                 "ms/token")
+    if len(devices) > 1:
+        # the expert-parallel claim: more devices -> more aggregate upload
+        # bandwidth -> less demand stall, at every request rate
+        pairs = list(zip(devices, devices[1:]))
+        good = sum(
+            all(stall[(b, r)] <= stall[(a, r)] + 1e-9 for a, b in pairs)
+            for r in rps_list)
+        emit(f"device-sweep/{arch_id}/rf={resident_fraction}"
+             "/stall-monotone-rates", good, "rates",
+             f"of {len(rps_list)} (D sweep {devices})")
+
+
 def main(quick=True, scheduling="continuous", policy="prefill",
          ssd_gbps=None, dram_cache=None):
     rps_list = [0.5, 2.0] if quick else [0.5, 1.0, 2.0, 4.0, 8.0]
@@ -180,6 +225,12 @@ if __name__ == "__main__":
                     help="comma-separated device expert-slot fractions "
                          "(e.g. 0.1,0.2,0.5): sweep per-token latency vs "
                          "resident fraction instead of the Fig-4 matrix")
+    ap.add_argument("--devices", default=None,
+                    help="comma-separated expert-parallel device counts "
+                         "(e.g. 1,2,4): sweep per-token latency, aggregate "
+                         "upload bandwidth, and demand stall vs mesh size "
+                         "at a fixed resident fraction (0.5, or the first "
+                         "--resident-fraction value)")
     ap.add_argument("--transfer-dtype", default=None,
                     help="comma-separated expert wire dtypes (e.g. "
                          "fp32,fp16,int8): sweep per-token latency and "
@@ -193,7 +244,16 @@ if __name__ == "__main__":
     args = ap.parse_args()
     if args.json:
         start_json_capture()
-    if args.transfer_dtype:
+    if args.devices:
+        devices = [int(x) for x in args.devices.split(",")]
+        rf = (float(args.resident_fraction.split(",")[0])
+              if args.resident_fraction else 0.5)
+        if not args.full:
+            print("# quick device sweep (1 model x 2 rates); pass --full "
+                  "for 4 rates")
+        run_device_sweep(devices, quick=not args.full, resident_fraction=rf,
+                         ssd_gbps=args.ssd_gbps, dram_cache=args.dram_cache)
+    elif args.transfer_dtype:
         dtypes = args.transfer_dtype.split(",")
         rf = (float(args.resident_fraction.split(",")[0])
               if args.resident_fraction else 0.5)

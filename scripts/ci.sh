@@ -106,6 +106,32 @@ print(f"ci.sh: slot cache OK (resident {res}/{total}, hits={hits}, "
       f"demand-uploads={demand}, overlap==fenced, tokens bit-identical)")
 PY
 
+    # expert-parallel serving (DESIGN.md §8): the same rf=0.5 run sharded
+    # over a forced-host 4-device mesh (serve bootstraps
+    # --xla_force_host_platform_device_count itself) must not change a
+    # single token vs the D=1 run above
+    echo "ci.sh: SMOKE tier — expert-parallel D=4 vs D=1 token identity"
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout "${SMOKE_TIMEOUT:-300}" \
+        python -m repro.launch.serve --reduced --requests 4 \
+        --resident-fraction 0.5 --devices 4 | tee "$SLOT_TMP/d4.log" \
+        | log_tee serve_rf05_d4.log
+    python - "$SLOT_TMP/half.log" "$SLOT_TMP/d4.log" <<'PY'
+import re, sys
+
+half, d4 = open(sys.argv[1]).read(), open(sys.argv[2]).read()
+toks_1 = re.findall(r"toks=([\d,]+)", half)
+toks_4 = re.findall(r"toks=([\d,]+)", d4)
+assert toks_1 and toks_4 == toks_1, \
+    f"D=4 sharded serve diverged from D=1: {toks_1} vs {toks_4}"
+m = re.search(r"devices: D=4 links=(\d+) link-util=\[([^\]]*)\]", d4)
+assert m, "D=4 run missing the devices/per-link report line"
+assert int(m.group(1)) >= 4, f"D=4 run used only {m.group(1)} upload links"
+r = re.search(r"rebalances=(\d+)", d4)
+assert r and int(r.group(1)) > 0, "placement never rebalanced over 4 requests"
+print(f"ci.sh: expert-parallel OK (D=4 tokens == D=1, links={m.group(1)}, "
+      f"rebalances={r.group(1)})")
+PY
+
     echo "ci.sh: SMOKE tier — online EAMC cold start + save/load warm restart"
     scratch EAMC_TMP
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout "${SMOKE_TIMEOUT:-300}" \
@@ -149,8 +175,14 @@ if [ -n "${BENCH:-}" ]; then
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout "${BENCH_TIMEOUT:-600}" \
         python -m benchmarks.bench_rps --transfer-dtype fp32,fp16,int8 \
         --json "$BENCH_TMP/wire.json" | log_tee bench_wire_sweep.log
+    echo "ci.sh: BENCH tier — expert-parallel device sweep (D=1,2,4)"
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout "${BENCH_TIMEOUT:-600}" \
+        python -m benchmarks.bench_rps --devices 1,2,4 \
+        --json "$BENCH_TMP/devices.json" | log_tee bench_device_sweep.log
+    # the PR-7 trajectory point: the device-sweep emits, archived by name
+    [ -n "$LOG_DIR" ] && cp "$BENCH_TMP/devices.json" "$LOG_DIR/BENCH_7.json"
     python - "$BENCH_TMP/rps.json" "$BENCH_TMP/cdf.json" \
-        "$BENCH_TMP/wire.json" <<'PY'
+        "$BENCH_TMP/wire.json" "$BENCH_TMP/devices.json" <<'PY'
 import json, sys
 
 for p in sys.argv[1:]:
@@ -177,6 +209,18 @@ for rps in rates:
     assert seq[0] >= seq[1] >= seq[2], \
         f"upload bytes not monotone at rps={rps}: {seq}"
     print(f"ci.sh: wire sweep rps={rps} upload-bytes {seq} monotone OK")
+
+# device sweep: more devices -> more aggregate upload bandwidth -> less
+# demand stall per token at rf<1; the bench emits its own monotonicity
+# tally, asserted here to cover every request rate
+with open(sys.argv[4]) as f:
+    rows = {r["name"]: r for r in json.load(f)["rows"]}
+mono = [r for n, r in rows.items() if n.endswith("/stall-monotone-rates")]
+assert mono, "device sweep emitted no monotonicity row"
+n_rates = int(mono[0]["derived"].split()[1])
+assert mono[0]["value"] == n_rates, \
+    f"device-sweep stall not monotone with D: {mono[0]}"
+print(f"ci.sh: device sweep stall monotone at all {n_rates} rates OK")
 PY
 fi
 

@@ -76,6 +76,9 @@ class Link:
         # demand/prefetch split of the traffic (per-tier accounting)
         self.demand_bytes = 0.0
         self.prefetch_bytes = 0.0
+        # accumulated seconds this link spent transferring (utilization =
+        # busy_s / wall clock); aborted transfers are unwound
+        self.busy_s = 0.0
 
     # -- queue management (paper §5.3: re-enqueue replaces priority) ---------
     def submit(self, key: Key, priority: float, size: int,
@@ -129,7 +132,8 @@ class MemSim:
 
     def __init__(self, hw: HWConfig = PAPER_8GPU, *,
                  expert_bytes: int, on_arrive=None, admit=None,
-                 demand_overhead: float = 0.0, n_gpu_links: int = 1):
+                 demand_overhead: float = 0.0, n_gpu_links: int = 1,
+                 link_of=None):
         self.hw = hw
         self.expert_bytes = expert_bytes
         # per-demand-fetch fixed overhead (CUDA-UM baselines pay page-fault
@@ -141,6 +145,10 @@ class MemSim:
         # links (a multi-GPU server, or a v5e host's multiple PCIe roots)
         self.gpu_links = [Link(hw.dram_to_dev_gbps)
                           for _ in range(max(1, n_gpu_links))]
+        # expert→link routing: default deterministic hash striping; an
+        # expert-parallel engine passes a placement-aware ``link_of(key)``
+        # so each expert rides its home device's host↔device link
+        self.link_of = link_of
         self.ssd_link = Link(hw.ssd_to_dram_gbps, hw.ssd_op_latency_s)
         self.on_gpu: Set[Key] = set()
         self.in_dram: Set[Key] = set()
@@ -166,6 +174,8 @@ class MemSim:
         return self.gpu_links[0]
 
     def _gpu_for(self, key: Key) -> Link:
+        if self.link_of is not None:
+            return self.gpu_links[self.link_of(key) % len(self.gpu_links)]
         return self.gpu_links[hash(key) % len(self.gpu_links)]
 
     def _gpu_inflight(self, key: Key) -> Optional[tuple]:
@@ -177,6 +187,22 @@ class MemSim:
     @property
     def gpu_bytes_moved(self) -> float:
         return sum(l.bytes_moved for l in self.gpu_links)
+
+    def link_stats(self) -> list:
+        """Per DRAM→device-link counters (ISSUE 7: the D-device crosswalk
+        needs per-link utilization, not just the aggregate)."""
+        return [
+            {
+                "bytes_moved": l.bytes_moved,
+                "demand_bytes": l.demand_bytes,
+                "prefetch_bytes": l.prefetch_bytes,
+                "n_transfers": l.n_transfers,
+                "busy_s": l.busy_s,
+                "utilization": (l.busy_s / self.clock) if self.clock > 0
+                else 0.0,
+            }
+            for l in self.gpu_links
+        ]
 
     def _xfer_time(self, link: Link) -> float:
         return self.expert_bytes / (link.gbps * 1e9) + link.op_latency
@@ -255,6 +281,7 @@ class MemSim:
                     dur = self._xfer_time(link)
                     link.inflight = (key, start, start + dur, pr)
                     link.busy_until = start + dur
+                    link.busy_s += dur
                     link.bytes_moved += size
                     if pr >= DEMAND_CLASS:
                         link.demand_bytes += size
@@ -376,7 +403,7 @@ class MemSim:
         infl = self.ssd_link.inflight
         if infl is None:
             return
-        ikey, _start, _end, pr = infl
+        ikey, istart, iend, pr = infl
         if ikey == key or pr >= DEMAND_CLASS:
             return
         # a sibling expert demanded this layer escalates via
@@ -391,6 +418,7 @@ class MemSim:
         link.bytes_moved -= self.expert_bytes
         link.prefetch_bytes -= self.expert_bytes
         link.n_transfers -= 1
+        link.busy_s -= iend - istart
         link.submit(ikey, pr, self.expert_bytes, now=self.clock)
 
     def _finish_until(self, t: float) -> None:

@@ -43,6 +43,12 @@ class OffloadConfig:
     max_inflight_queue: int = 0          # 0 = unbounded
     demand_overhead_s: float = 0.0       # per-demand fault overhead (UM)
     n_gpu_links: int = 1                 # parallel DRAM→device links (§7)
+    # expert-parallel degree (DESIGN.md §8): >1 shards experts across D
+    # devices with one host↔device link each (n_gpu_links is raised to D),
+    # EAMC-guided placement deciding each expert's home shard, and a
+    # compute-skew model for the all-to-all straggler term. 1 = the
+    # single-device engine, bit-identical to pre-sharding behavior.
+    n_devices: int = 1
     # quantized expert wire (DESIGN.md §7): the dtype experts ship in.
     # ``wire_expert_bytes`` is the per-expert transfer size the simulator
     # charges — None derives it analytically from the dtype (incl. int8
@@ -118,12 +124,23 @@ class OffloadEngine:
             # that know it pass wire_expert_bytes explicitly)
             wire_bytes = int(cfg.expert_bytes
                              * quant.wire_itemsize(cfg.transfer_dtype) / 4)
+        # expert-parallel placement (DESIGN.md §8): only instantiated at
+        # D>1 so the single-device hot path stays byte-for-byte untouched
+        self.placement = None
+        link_of = None
+        n_links = cfg.n_gpu_links
+        if cfg.n_devices > 1:
+            from repro.core.placement import ExpertPlacement
+            self.placement = ExpertPlacement(
+                cfg.n_moe_layers, cfg.n_experts, cfg.n_devices)
+            n_links = max(cfg.n_gpu_links, cfg.n_devices)
+            link_of = lambda key: self.placement.device_of(*key)  # noqa: E731
         self.sim = MemSim(
             cfg.hw,
             expert_bytes=wire_bytes,
             on_arrive=self._on_arrive, admit=self._admit,
             demand_overhead=cfg.demand_overhead_s,
-            n_gpu_links=cfg.n_gpu_links)
+            n_gpu_links=n_links, link_of=link_of)
         self.prefetcher.tier_weight = (self.sim.tier_weight
                                        if cfg.tier_aware else None)
         self._protected: frozenset = frozenset()
@@ -282,6 +299,12 @@ class OffloadEngine:
         if record_drift:
             self.eamc.record_for_reconstruction(eam)
         self._eamc_lifecycle(eam)
+        if self.placement is not None:
+            # placement learns from the same finish_seq stream as the EAMC:
+            # re-home by fresh EWMA loads, then top up hot-expert replicas
+            self.placement.observe(eam)
+            self.placement.rebalance()
+            self.placement.replicate()
         if not self.seq_ctxs:
             # engine idle: the inference procedure is over — drop its
             # prefetch queue (Algorithm 1's ``q`` is procedure-scoped) and
@@ -389,7 +412,13 @@ class OffloadEngine:
             self._dram_access(key)
         self._protected = frozenset()
 
-        # step 13: experts execute
+        # step 13: experts execute. With expert parallelism the layer's
+        # wall time is the straggler shard's share of the grouped GEMM
+        # (comp × max token share; replicas split hot experts' tokens) —
+        # max_share is 1.0 at D=1 so the single-device model is unchanged.
+        if self.placement is not None:
+            compute_time = compute_time * self.placement.max_share(
+                layer_idx, combined)
         self.sim.advance(compute_time)
         self.layer_stalls.append(stall)
         return stall
@@ -423,4 +452,7 @@ class OffloadEngine:
             "ssd_demand_bytes": sim.ssd_link.demand_bytes,
             "ssd_prefetch_bytes": sim.ssd_link.prefetch_bytes,
             "clock": sim.clock,
+            "n_gpu_links": len(sim.gpu_links),
+            "gpu_link_stats": sim.link_stats(),
+            **(self.placement.stats() if self.placement is not None else {}),
         }

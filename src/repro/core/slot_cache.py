@@ -174,17 +174,24 @@ class ExpertSlotCache:
     """
 
     def __init__(self, store: HostExpertStore, n_slots: int, *,
-                 fenced: bool = False):
+                 fenced: bool = False, device=None):
         import jax
         import jax.numpy as jnp
         self._jax, self._jnp = jax, jnp
         self.store = store
         self.n_slots = int(n_slots)
         self.fenced = bool(fenced)
+        # expert-parallel serving (DESIGN.md §8) runs one cache per mesh
+        # device: pinning the buffers (and every staged upload) to ``device``
+        # gives each shard its own independent host→device upload stream
+        self.device = device
         self.bufs = {
             name: jnp.zeros((self.n_slots,) + store.wire_shapes[name],
                             store.wire_dtypes[name])
             for name in store.wire_names}
+        if device is not None:
+            self.bufs = {name: jax.device_put(buf, device)
+                         for name, buf in self.bufs.items()}
         self.slot_of = np.full((store.n_moe, store.n_experts), -1, np.int32)
         self.key_of: List[Optional[Key]] = [None] * self.n_slots
         self._free: List[int] = list(range(self.n_slots))
@@ -231,7 +238,7 @@ class ExpertSlotCache:
         kernels keep the weights they were dispatched with)."""
         slot = self._free.pop()
         w = self.store.wire_expert(*key)
-        self._staged[slot] = {name: self._jax.device_put(arr)
+        self._staged[slot] = {name: self._jax.device_put(arr, self.device)
                               for name, arr in w.items()}
         self.slot_of[key[0], key[1]] = slot
         self.key_of[slot] = key

@@ -184,6 +184,97 @@ def moe_ffn_quant(xg, w_gate, w_up, w_down, sg=None, su=None, sd=None, *,
     )(*operands)
 
 
+def _grouped_ffn_jnp(xg, w_gate, w_up, w_down, *, act: str):
+    """Pure-jnp grouped expert FFN, op-for-op the same einsum contraction
+    order as ``repro.models.moe.grouped_expert_ffn`` (duplicated here so the
+    kernel package stays import-independent of the model package): the
+    fallback expert impl for hosts where the Pallas kernel cannot run
+    compiled (CPU serving), with bit-identity to the unsharded jnp path."""
+    if act == "swiglu":
+        act_fn = jax.nn.silu
+    elif act == "geglu":
+        act_fn = functools.partial(jax.nn.gelu, approximate=True)
+    elif act == "relu2":
+        act_fn = lambda v: jnp.square(jax.nn.relu(v))  # noqa: E731
+    else:
+        act_fn = functools.partial(jax.nn.gelu, approximate=True)
+    up = jnp.einsum("ecd,edf->ecf", xg, w_up)
+    if w_gate is not None:
+        h = act_fn(jnp.einsum("ecd,edf->ecf", xg, w_gate)) * up
+    else:
+        h = act_fn(up)
+    return jnp.einsum("ecf,efd->ecd", h, w_down)
+
+
+def moe_ffn_sharded(xg, w_gate, w_up, w_down, *, mesh, axis_name="expert",
+                    act: str = "swiglu", block_c: int = 128,
+                    block_f: int = 512, interpret: bool = False,
+                    impl: str = "pallas"):
+    """Expert-parallel grouped FFN over a device mesh (DESIGN.md §8).
+
+    ``xg``: (E, C, d) capacity-dispatched token blocks, sharded (or
+    shardable) over C; ``w_*``: (E, d, f)/(E, f, d) expert weights sharded
+    over the leading expert axis — exactly the sharding story the dense
+    kernel's grid was designed for. Inside ``shard_map`` each device holds
+    (E, C/D, d) tokens and (E/D, d, f) weights; an ``all_to_all`` over
+    ``axis_name`` exchanges token sub-blocks so device ``i`` ends up with
+    the *full* C rows of its own expert slice (E/D, C, d), runs the
+    grouped-expert GEMM locally (``impl="pallas"`` = :func:`moe_ffn`,
+    ``impl="jnp"`` = the einsum fallback), and the reverse ``all_to_all``
+    restores the (E, C/D, d) layout. C is zero-padded up to a multiple of D
+    (pad rows are all-zero token blocks: each token row is independent in
+    the FFN, so padding never perturbs real rows).
+
+    Per-token numerics are unchanged by the sharding: the contraction dims
+    (d, and the f-blocking inside the kernel) are not partitioned, and the
+    two all-to-alls are exact permutations — D=1 is bit-identical to
+    :func:`moe_ffn` by construction (no pad, identity exchange, same
+    kernel), and D>1 is bit-identical per token row.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    D = int(mesh.shape[axis_name])
+    E, C, d = xg.shape
+    if E % D != 0:
+        raise ValueError(f"n_experts {E} must divide by the expert-parallel "
+                         f"degree {D}")
+    Cp = -(-C // D) * D
+    if Cp != C:
+        xg = jnp.pad(xg, ((0, 0), (0, Cp - C), (0, 0)))
+    gated = w_gate is not None
+    Cb = Cp // D
+
+    def local(xg_l, *ws):
+        wg_l, wu_l, wd_l = ws if gated else (None,) + ws
+        if D > 1:
+            t = xg_l.reshape(D, E // D, Cb, d)
+            t = jax.lax.all_to_all(t, axis_name, split_axis=0, concat_axis=2,
+                                   tiled=True)
+            xg_x = t.reshape(E // D, Cp, d)
+        else:
+            xg_x = xg_l
+        if impl == "pallas":
+            y_l = moe_ffn(xg_x, wg_l, wu_l, wd_l, act=act, block_c=block_c,
+                          block_f=block_f, interpret=interpret)
+        else:
+            y_l = _grouped_ffn_jnp(xg_x, wg_l, wu_l, wd_l, act=act)
+        if D > 1:
+            t = y_l.reshape(E // D, D, Cb, d)
+            t = jax.lax.all_to_all(t, axis_name, split_axis=1, concat_axis=0,
+                                   tiled=True)
+            y_l = t.reshape(E, Cb, d)
+        return y_l
+
+    x_spec = P(None, axis_name, None)
+    w_spec = P(axis_name, None, None)
+    operands = (xg,) + ((w_gate,) if gated else ()) + (w_up, w_down)
+    in_specs = (x_spec,) + (w_spec,) * (len(operands) - 1)
+    y = shard_map(local, mesh=mesh, in_specs=in_specs, out_specs=x_spec,
+                  check_rep=False)(*operands)
+    return y[:, :C] if Cp != C else y
+
+
 def moe_ffn_slots(xg, slot_weights, slot_ids, *, act: str = "swiglu",
                   block_c: int = 128, block_f: int = 512,
                   interpret: bool = False):

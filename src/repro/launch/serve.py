@@ -96,8 +96,24 @@ def main(argv=None):
     ap.add_argument("--eamc-path", default=None,
                     help="persisted EAMC (.npz): loaded at startup when the "
                          "file exists (warm restart) and rewritten at exit")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="expert-parallel degree (DESIGN.md §8): shard "
+                         "experts over D mesh devices with one slot cache "
+                         "and upload link each, all-to-all MoE dispatch, "
+                         "and EAMC-guided placement. On a CPU host, forced "
+                         "host devices are configured automatically")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.devices > 1:
+        # must happen before the first jax device use: force enough host
+        # devices for the expert mesh (the dryrun launcher's pattern). A
+        # user-supplied count in XLA_FLAGS wins.
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "--xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                flags + " --xla_force_host_platform_device_count="
+                f"{args.devices}").strip()
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -146,7 +162,8 @@ def main(argv=None):
                      resident_fraction=args.resident_fraction,
                      n_weight_slots=args.weight_slots,
                      transfer_dtype=args.transfer_dtype,
-                     fenced_uploads=args.fenced_uploads),
+                     fenced_uploads=args.fenced_uploads,
+                     n_devices=args.devices),
         model, params, eamc=eamc,
         cache_len=args.prompt_len + args.max_new)
 
@@ -207,6 +224,15 @@ def main(argv=None):
               f"schedule={'fenced' if args.fenced_uploads else 'overlap'}")
     else:
         print("slots: all-resident (resident-fraction 1.0)")
+    if args.devices > 1:
+        links = stats["gpu_link_stats"]
+        util = " ".join(f"{l['utilization']:.3f}" for l in links)
+        busy = " ".join(f"{l['busy_s']*1e3:.1f}" for l in links)
+        print(f"devices: D={args.devices} links={stats['n_gpu_links']} "
+              f"link-util=[{util}] link-busy-ms=[{busy}] "
+              f"rebalances={stats['placement_rebalances']} "
+              f"migrations={stats['placement_migrations']} "
+              f"replicated={stats['replicated_experts']}")
     learned = stats["eamc_online_inserts"] + stats["eamc_online_merges"]
     print(f"eamc: source={eamc_source} entries={stats['eamc_entries']} "
           f"learned={learned} "

@@ -94,6 +94,10 @@ class EngineConfig:
     keep_request_eams: bool = True
     demand_overhead_s: float = 0.0   # UM-style per-fault handling overhead
     n_gpu_links: int = 1             # parallel DRAM→device links
+    # expert-parallel degree (DESIGN.md §8): shard experts over D devices —
+    # per-device slot caches + upload links, all-to-all token dispatch in
+    # model mode, EAMC-guided placement. 1 = single-device (unchanged).
+    n_devices: int = 1
     # expert wire dtype (DESIGN.md §7): fp32 | fp16 | int8. One value
     # drives BOTH the simulator's per-transfer byte model (analytic, incl.
     # int8 scale rows) and — in model mode — the real slot-cache wire
@@ -151,6 +155,7 @@ class StepEngine:
             prefetch=cfg.prefetch,
             demand_overhead_s=cfg.demand_overhead_s,
             n_gpu_links=cfg.n_gpu_links,
+            n_devices=cfg.n_devices,
             transfer_dtype=cfg.transfer_dtype,
             wire_expert_bytes=quant.sim_wire_expert_bytes(
                 arch, cfg.bytes_per_param, cfg.transfer_dtype),
@@ -497,15 +502,25 @@ class JaxModelServer(StepEngine):
         # the layered runtime (DESIGN.md §6); None = all-resident fused step
         self.slot_runtime = None
         if n_weight_slots is not None:
-            from repro.serving.slot_runtime import SlotStreamRuntime
-            self.slot_runtime = SlotStreamRuntime(
-                model, params,
+            kw = dict(
                 n_pool_slots=self.n_slots,
                 n_weight_slots=n_weight_slots,
                 victim_fn=self.offload.gpu_cache.policy.victim,
                 compile_counts=self.compile_counts,
                 transfer_dtype=cfg.transfer_dtype,
                 fenced=cfg.fenced_uploads)
+            if cfg.n_devices > 1:
+                # expert-parallel serving (DESIGN.md §8): per-device slot
+                # caches + all-to-all dispatch over the ("expert",) mesh,
+                # homes decided by the offload engine's placement policy
+                from repro.launch.mesh import make_expert_mesh
+                from repro.serving.slot_runtime import ShardedSlotRuntime
+                self.slot_runtime = ShardedSlotRuntime(
+                    model, params, mesh=make_expert_mesh(cfg.n_devices),
+                    placement=self.offload.placement, **kw)
+            else:
+                from repro.serving.slot_runtime import SlotStreamRuntime
+                self.slot_runtime = SlotStreamRuntime(model, params, **kw)
             # the device now only holds the stripped tree + the slot buffers
             self.params = self.slot_runtime.params
             # sim↔real crosswalk: the simulator charges exactly the bytes
@@ -528,12 +543,17 @@ class JaxModelServer(StepEngine):
             return cfg, None
         n_moe = sum(arch.is_moe_layer(i) for i in range(arch.n_layers))
         total = n_moe * arch.moe.n_experts
+        from dataclasses import replace
         if cfg.n_weight_slots is None and cfg.resident_fraction >= 1.0:
-            return cfg, None
+            if cfg.n_devices <= 1:
+                return cfg, None
+            # expert parallelism always runs the sharded layered walk:
+            # all-resident just means every expert has a home slot
+            return (replace(cfg, n_weight_slots=total,
+                            gpu_cache_experts=total), total)
         n = (cfg.n_weight_slots if cfg.n_weight_slots is not None
              else int(round(cfg.resident_fraction * total)))
         n = min(total, max(n, min(total, arch.moe.n_experts)))
-        from dataclasses import replace
         return replace(cfg, n_weight_slots=n, gpu_cache_experts=n), n
     def _scheduler_cfg(self) -> SchedulerConfig:
         from dataclasses import replace
