@@ -32,6 +32,21 @@ if git ls-files | grep -E '\.(pyc|npz)$'; then
     exit 1
 fi
 
+# Static invariant checks (repro.analysis, DESIGN.md §9): recompile
+# hazards, donation/aliasing, host-sync discipline, Pallas purity, config
+# drift. Fails on any finding not covered by analysis-baseline.json or an
+# inline suppression-with-reason. The linter is stdlib-only, so it runs
+# before the dependency install on purpose.
+echo "ci.sh: lint — repro.analysis static invariant checks"
+if [ -n "$LOG_DIR" ]; then
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.analysis.lint \
+        --json "$LOG_DIR/lint_report.json" \
+        --jit-map "$LOG_DIR/jit_map.json" src benchmarks tests
+else
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.analysis.lint \
+        src benchmarks tests
+fi
+
 if [ -z "${SKIP_INSTALL:-}" ]; then
     python -m pip install -q -r requirements-dev.txt || \
         echo "ci.sh: pip install failed (offline?); running with baked-in deps"
@@ -102,8 +117,13 @@ assert hits > 0, "slot cache reported zero hits"
 assert demand > 0, "slot cache reported zero demand uploads"
 assert "schedule=overlap" in half and "schedule=fenced" in fenced, \
     "serve report missing the upload-schedule tag"
+for name, s in (("rf05", half), ("rf10", full), ("fenced", fenced)):
+    assert "guard: zero-recompile ok" in s, \
+        f"{name}: recompile_guard line missing — a jit entry retraced " \
+        "during steady-state decode (or the guard was dropped from serve)"
 print(f"ci.sh: slot cache OK (resident {res}/{total}, hits={hits}, "
-      f"demand-uploads={demand}, overlap==fenced, tokens bit-identical)")
+      f"demand-uploads={demand}, overlap==fenced, tokens bit-identical, "
+      "zero recompiles)")
 PY
 
     # expert-parallel serving (DESIGN.md §8): the same rf=0.5 run sharded
@@ -128,6 +148,8 @@ assert m, "D=4 run missing the devices/per-link report line"
 assert int(m.group(1)) >= 4, f"D=4 run used only {m.group(1)} upload links"
 r = re.search(r"rebalances=(\d+)", d4)
 assert r and int(r.group(1)) > 0, "placement never rebalanced over 4 requests"
+assert "guard: zero-recompile ok" in d4, \
+    "D=4: recompile_guard line missing — a sharded jit entry retraced"
 print(f"ci.sh: expert-parallel OK (D=4 tokens == D=1, links={m.group(1)}, "
       f"rebalances={r.group(1)})")
 PY

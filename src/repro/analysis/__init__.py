@@ -1,0 +1,25 @@
+"""repro.analysis — JAX-aware static invariant checks (DESIGN.md §9).
+
+Every performance claim this reproduction makes rests on invariants that
+runtime tests only exercise on tiny configs: the zero-recompile slot pool,
+the donated-buffer staging→commit splice, the declared host-sync fence
+points, Pallas kernel purity, and config knobs actually being plumbed.
+This package makes those invariants checkable statically across the whole
+tree on every push:
+
+* a rule registry (:mod:`repro.analysis.rules`) with per-rule findings
+  carrying file:line + fix hints,
+* an inline-suppression syntax (``# repro-lint: disable=<rule> -- reason``,
+  the reason is mandatory),
+* a committed baseline for grandfathered findings
+  (``analysis-baseline.json``, every entry carries a reason),
+* a jit-boundary call graph (which functions are traced, what is static,
+  what is donated) emitted as a JSON artifact for future rules and the
+  autotuner,
+* a CLI: ``python -m repro.analysis.lint [--json R] [--jit-map M] paths``.
+
+Hard requirement: this package imports **nothing outside the stdlib**
+(asserted by tests/test_analysis.py) so the linter runs before any of the
+repo's dependencies are importable — e.g. as the first CI step.
+"""
+from repro.analysis.findings import Finding            # noqa: F401

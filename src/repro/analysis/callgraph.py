@@ -1,0 +1,617 @@
+"""The jit-boundary call graph: which functions run under a trace.
+
+Built from stdlib ``ast`` alone, across every scanned module:
+
+* **trace entry points** — every ``jax.jit(f, …)`` / ``@jax.jit`` /
+  ``@functools.partial(jax.jit, …)`` / ``pl.pallas_call(kernel, …)`` /
+  ``shard_map(f, …)`` site, with its ``static_argnums``/``static_argnames``
+  and ``donate_argnums``;
+* **the traced set** — functions reachable from an entry point's target
+  through name-resolved calls (locals and module scope exactly; attribute
+  calls like ``model._decode_block`` heuristically against a global method
+  index, with common container/ndarray method names excluded). Functions
+  defined *inside* a traced function are traced too (the ``pl.when``
+  pattern);
+* **donation/jit-maker maps** — names and ``self.<attr>``s assigned from a
+  ``jit(…)`` call, and methods whose body builds and returns a jitted
+  callable (the repo's ``_decode_pre``-style builder pattern), with the
+  donated positions of each.
+
+Resolution is name-based and intentionally heuristic: precise enough to
+drive the repo-tuned rules, cheap enough to run on every push, and emitted
+as a JSON artifact (``--jit-map``) so future rules and the ROADMAP-5
+autotuner can consume the boundary without re-deriving it.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.source import ModuleSource
+
+# attribute-call names never resolved against the global method index
+# (container/ndarray/stdlib methods that would otherwise alias user code)
+ATTR_RESOLVE_BLOCKLIST = frozenset({
+    "get", "items", "keys", "values", "append", "extend", "add", "pop",
+    "update", "copy", "clear", "remove", "insert", "count", "index",
+    "join", "split", "strip", "startswith", "endswith", "format", "sort",
+    "read", "write", "close", "sum", "mean", "max", "min", "all", "any",
+    "reshape", "astype", "item", "flatten", "tolist", "setdefault",
+    "squeeze", "transpose", "dot", "put", "fill", "exists", "resolve",
+})
+
+# import roots treated as "jax-ish" (device-value producers) vs numpy
+JAX_ROOTS = ("jax",)
+NUMPY_ROOTS = ("numpy",)
+
+
+def call_attr_name(func: ast.AST) -> str:
+    """Last path component of a call target: jax.jit -> 'jit'."""
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return ""
+
+
+def base_name(node: ast.AST) -> str:
+    """Leftmost Name of an attribute/subscript chain ('' if none)."""
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else ""
+
+
+def const_int_tuple(node: Optional[ast.AST]) -> Tuple[int, ...]:
+    if node is None:
+        return ()
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, int):
+                out.append(e.value)
+        return tuple(out)
+    return ()
+
+
+def const_str_tuple(node: Optional[ast.AST]) -> Tuple[str, ...]:
+    if node is None:
+        return ()
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return tuple(e.value for e in node.elts
+                     if isinstance(e, ast.Constant)
+                     and isinstance(e.value, str))
+    return ()
+
+
+class FuncInfo:
+    """One function/lambda definition with its lexical context."""
+
+    def __init__(self, node, module: ModuleSource, qualname: str,
+                 parent: Optional["FuncInfo"], class_name: str):
+        self.node = node
+        self.module = module
+        self.qualname = qualname
+        self.name = getattr(node, "name", "<lambda>")
+        self.parent = parent
+        self.class_name = class_name          # nearest enclosing class
+        self.children: Dict[str, "FuncInfo"] = {}
+        self.params = self._param_names(node)
+        self.lineno = node.lineno
+
+    @staticmethod
+    def _param_names(node) -> Tuple[str, ...]:
+        a = node.args
+        names = [p.arg for p in
+                 list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)]
+        if a.vararg:
+            names.append(a.vararg.arg)
+        if a.kwarg:
+            names.append(a.kwarg.arg)
+        return tuple(names)
+
+    @property
+    def is_method(self) -> bool:
+        return bool(self.class_name) and (
+            self.parent is None or self.parent.class_name != self.class_name)
+
+    def key(self) -> str:
+        return f"{self.module.relpath}::{self.qualname}"
+
+
+class TraceEntry:
+    """One trace boundary: a jit/pallas_call/shard_map site."""
+
+    def __init__(self, kind: str, module: ModuleSource, lineno: int,
+                 target: Optional[FuncInfo],
+                 static_argnums: Tuple[int, ...] = (),
+                 static_argnames: Tuple[str, ...] = (),
+                 donate_argnums: Tuple[int, ...] = ()):
+        self.kind = kind
+        self.module = module
+        self.lineno = lineno
+        self.target = target
+        self.static_argnums = static_argnums
+        self.static_argnames = static_argnames
+        self.donate_argnums = donate_argnums
+
+    def to_json(self) -> dict:
+        return {
+            "kind": self.kind,
+            "path": self.module.relpath,
+            "line": self.lineno,
+            "wraps": self.target.qualname if self.target else None,
+            "static_argnums": list(self.static_argnums),
+            "static_argnames": list(self.static_argnames),
+            "donate_argnums": list(self.donate_argnums),
+        }
+
+
+class _Collector(ast.NodeVisitor):
+    """Collect every function/lambda in a module with lexical scoping."""
+
+    def __init__(self, module: ModuleSource, graph: "CallGraph"):
+        self.module = module
+        self.graph = graph
+        self.scope: List[str] = []
+        self.func_stack: List[FuncInfo] = []
+        self.class_stack: List[str] = []
+
+    def _add(self, node) -> FuncInfo:
+        name = getattr(node, "name", "<lambda>")
+        qual = ".".join(self.scope + [name]) if self.scope else name
+        parent = self.func_stack[-1] if self.func_stack else None
+        cls = self.class_stack[-1] if self.class_stack else ""
+        fi = FuncInfo(node, self.module, qual, parent, cls)
+        self.graph.functions.append(fi)
+        self.graph.by_node[id(node)] = fi
+        if parent is not None:
+            parent.children.setdefault(fi.name, fi)
+        else:
+            self.graph.module_scope.setdefault(
+                self.module.relpath, {}).setdefault(fi.name, fi)
+        if fi.is_method:
+            self.graph.methods.setdefault(fi.name, []).append(fi)
+        if parent is None and not cls:
+            self.graph.module_funcs.setdefault(fi.name, []).append(fi)
+        return fi
+
+    def _visit_func(self, node):
+        fi = self._add(node)
+        self.scope.append(fi.name)
+        if not isinstance(node, ast.Lambda):
+            self.scope.append("<locals>")
+        self.func_stack.append(fi)
+        self.generic_visit(node)
+        self.func_stack.pop()
+        if not isinstance(node, ast.Lambda):
+            self.scope.pop()
+        self.scope.pop()
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+    visit_Lambda = _visit_func
+
+    def visit_ClassDef(self, node):
+        self.scope.append(node.name)
+        self.class_stack.append(node.name)
+        self.generic_visit(node)
+        self.class_stack.pop()
+        self.scope.pop()
+
+    def visit_Assign(self, node):
+        # name = lambda ...: bind the lambda under the name for resolution
+        if isinstance(node.value, ast.Lambda) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            fi = self.graph.by_node.get(id(node.value))
+        self.generic_visit(node)
+        if isinstance(node.value, ast.Lambda) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            fi = self.graph.by_node.get(id(node.value))
+            if fi is not None:
+                tgt = node.targets[0].id
+                if self.func_stack:
+                    self.func_stack[-1].children.setdefault(tgt, fi)
+                else:
+                    self.graph.module_scope.setdefault(
+                        self.module.relpath, {}).setdefault(tgt, fi)
+
+
+class CallGraph:
+    """Tree-wide jit-boundary graph over a list of ModuleSources."""
+
+    def __init__(self, modules: Sequence[ModuleSource]):
+        self.modules = [m for m in modules if m.tree is not None]
+        self.functions: List[FuncInfo] = []
+        self.by_node: Dict[int, FuncInfo] = {}
+        self.module_scope: Dict[str, Dict[str, FuncInfo]] = {}
+        self.methods: Dict[str, List[FuncInfo]] = {}
+        self.module_funcs: Dict[str, List[FuncInfo]] = {}
+        self.entries: List[TraceEntry] = []
+        self.traced: Set[str] = set()          # FuncInfo.key()
+        self.traced_via: Dict[str, List[int]] = {}   # key -> entry indices
+        # per-module alias/import info
+        self.jax_aliases: Dict[str, Set[str]] = {}
+        self.np_aliases: Dict[str, Set[str]] = {}
+        self.from_imports: Dict[str, Dict[str, str]] = {}  # name -> module
+        # donation / jit-maker maps (per module where sensible)
+        self.donating_names: Dict[Tuple[str, str], Tuple[int, ...]] = {}
+        self.jit_names: Dict[Tuple[str, str], bool] = {}
+        self.donating_attrs: Dict[str, Tuple[int, ...]] = {}
+        self.jit_attrs: Set[str] = set()
+        self.donating_methods: Dict[str, Tuple[int, ...]] = {}
+        self.jit_maker_methods: Set[str] = set()
+        self.kernel_roots: Set[str] = set()    # pallas kernel FuncInfo keys
+        for m in self.modules:
+            _Collector(m, self).visit(m.tree)
+            self._collect_imports(m)
+        for m in self.modules:
+            self._collect_entries_and_makers(m)
+        for m in self.modules:
+            self._bind_maker_results(m)
+        self._mark_traced()
+
+    # -- imports -------------------------------------------------------------
+    def _collect_imports(self, m: ModuleSource) -> None:
+        jaxa, npa, froms = set(), set(), {}
+        for node in ast.walk(m.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    root = a.name.split(".")[0]
+                    alias = (a.asname or a.name.split(".")[0])
+                    if root in JAX_ROOTS:
+                        jaxa.add(alias)
+                    elif root in NUMPY_ROOTS:
+                        npa.add(alias)
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                root = node.module.split(".")[0]
+                for a in node.names:
+                    alias = a.asname or a.name
+                    froms[alias] = node.module
+                    if root in JAX_ROOTS:
+                        jaxa.add(alias)
+                    elif root in NUMPY_ROOTS:
+                        npa.add(alias)
+        # repo-idiomatic attribute aliases: self._jax / self._jnp
+        jaxa.update({"_jax", "_jnp", "jnp", "lax"} if jaxa else set())
+        self.jax_aliases[m.relpath] = jaxa
+        self.np_aliases[m.relpath] = npa
+        self.from_imports[m.relpath] = froms
+
+    def imports_jax(self, m: ModuleSource) -> bool:
+        return bool(self.jax_aliases.get(m.relpath))
+
+    def is_jaxish(self, m: ModuleSource, node: ast.AST) -> bool:
+        """Does this expression's base name look like a jax module alias?"""
+        b = base_name(node)
+        return b in self.jax_aliases.get(m.relpath, ())
+
+    def is_numpyish(self, m: ModuleSource, node: ast.AST) -> bool:
+        b = base_name(node)
+        return b in self.np_aliases.get(m.relpath, ())
+
+    # -- entry points, donation maps -----------------------------------------
+    @staticmethod
+    def _is_jit_func(func: ast.AST) -> bool:
+        return call_attr_name(func) == "jit"
+
+    def _jit_call_info(self, call: ast.Call):
+        """(static_argnums, static_argnames, donate_argnums) kwargs."""
+        sn, sa, dn = (), (), ()
+        for kw in call.keywords:
+            if kw.arg == "static_argnums":
+                sn = const_int_tuple(kw.value)
+            elif kw.arg == "static_argnames":
+                sa = const_str_tuple(kw.value)
+            elif kw.arg == "donate_argnums":
+                dn = const_int_tuple(kw.value)
+        return sn, sa, dn
+
+    def _resolve_callable_arg(self, m: ModuleSource, node: ast.AST,
+                              scope: Optional[FuncInfo]) -> Optional[FuncInfo]:
+        """Resolve a jit/pallas_call/shard_map first argument to a def."""
+        if isinstance(node, ast.Lambda):
+            return self.by_node.get(id(node))
+        if isinstance(node, ast.Call) and \
+                call_attr_name(node.func) == "partial" and node.args:
+            return self._resolve_callable_arg(m, node.args[0], scope)
+        if isinstance(node, ast.Name):
+            return self.resolve_name(m, node.id, scope)
+        return None
+
+    def resolve_name(self, m: ModuleSource, name: str,
+                     scope: Optional[FuncInfo]) -> Optional[FuncInfo]:
+        f = scope
+        while f is not None:
+            if name in f.children:
+                return f.children[name]
+            f = f.parent
+        mod = self.module_scope.get(m.relpath, {})
+        if name in mod:
+            return mod[name]
+        # from-import of a repro module: resolve against the global index
+        src = self.from_imports.get(m.relpath, {}).get(name)
+        if src and src.startswith("repro"):
+            for cand in self.module_funcs.get(name, ()):
+                return cand
+        return None
+
+    def _enclosing(self, m: ModuleSource, node: ast.AST,
+                   parents: Dict[int, ast.AST]) -> Optional[FuncInfo]:
+        cur = parents.get(id(node))
+        while cur is not None:
+            fi = self.by_node.get(id(cur))
+            if fi is not None:
+                return fi
+            cur = parents.get(id(cur))
+        return None
+
+    def _collect_entries_and_makers(self, m: ModuleSource) -> None:
+        parents: Dict[int, ast.AST] = {}
+        for node in ast.walk(m.tree):
+            for child in ast.iter_child_nodes(node):
+                parents[id(child)] = node
+
+        for node in ast.walk(m.tree):
+            # decorated entry points: @jax.jit / @partial(jax.jit, ...)
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    kind = None
+                    sn = sa = dn = ()
+                    if self._is_jit_func(dec):
+                        kind = "jit"
+                    elif isinstance(dec, ast.Call):
+                        if self._is_jit_func(dec.func):
+                            kind = "jit"
+                            sn, sa, dn = self._jit_call_info(dec)
+                        elif call_attr_name(dec.func) == "partial" \
+                                and dec.args and \
+                                self._is_jit_func(dec.args[0]):
+                            kind = "jit"
+                            sn, sa, dn = self._jit_call_info(dec)
+                    if kind:
+                        self.entries.append(TraceEntry(
+                            kind, m, node.lineno, self.by_node[id(node)],
+                            sn, sa, dn))
+            if not isinstance(node, ast.Call):
+                continue
+            scope = self._enclosing(m, node, parents)
+            name = call_attr_name(node.func)
+            if self._is_jit_func(node.func) and node.args:
+                sn, sa, dn = self._jit_call_info(node)
+                target = self._resolve_callable_arg(m, node.args[0], scope)
+                self.entries.append(TraceEntry(
+                    "jit", m, node.lineno, target, sn, sa, dn))
+                self._record_jit_binding(m, node, parents, dn, scope)
+            elif name == "pallas_call" and node.args:
+                target = self._resolve_callable_arg(m, node.args[0], scope)
+                e = TraceEntry("pallas_call", m, node.lineno, target)
+                self.entries.append(e)
+                if target is not None:
+                    self.kernel_roots.add(target.key())
+            elif name == "shard_map":
+                tgt_node = node.args[0] if node.args else None
+                for kw in node.keywords:
+                    if kw.arg == "f":
+                        tgt_node = kw.value
+                target = (self._resolve_callable_arg(m, tgt_node, scope)
+                          if tgt_node is not None else None)
+                self.entries.append(TraceEntry(
+                    "shard_map", m, node.lineno, target))
+
+    def _record_jit_binding(self, m: ModuleSource, call: ast.Call,
+                            parents: Dict[int, ast.AST],
+                            donate: Tuple[int, ...],
+                            scope: Optional[FuncInfo]) -> None:
+        """Track what the jit(...) result is bound to: a name, a self
+        attribute (possibly via a dict/comprehension), or a jit-maker
+        method whose *call result* is the jitted callable."""
+        # nearest enclosing method (not a nested builder/lambda) is a
+        # jit-maker: calls of the form self.method(...)(args) trace/donate
+        f = scope
+        while f is not None:
+            if f.is_method or f.parent is None:
+                self.jit_maker_methods.add(f.name)
+                if donate:
+                    prev = self.donating_methods.get(f.name, ())
+                    self.donating_methods[f.name] = tuple(
+                        sorted(set(prev) | set(donate)))
+            f = f.parent
+        # direct bindings: walk up to the nearest Assign
+        cur: Optional[ast.AST] = call
+        while cur is not None and not isinstance(cur, ast.stmt):
+            cur = parents.get(id(cur))
+        if not isinstance(cur, ast.Assign):
+            return
+        for tgt in cur.targets:
+            for t in ([tgt.elts] if isinstance(tgt, ast.Tuple) else [[tgt]]):
+                for leaf in t:
+                    if isinstance(leaf, ast.Name):
+                        k = (m.relpath, leaf.id)
+                        self.jit_names[k] = True
+                        if donate:
+                            self.donating_names[k] = donate
+                    elif isinstance(leaf, (ast.Attribute, ast.Subscript)):
+                        attr = None
+                        n = leaf
+                        while isinstance(n, ast.Subscript):
+                            n = n.value
+                        if isinstance(n, ast.Attribute):
+                            attr = n.attr
+                        if attr:
+                            self.jit_attrs.add(attr)
+                            if donate:
+                                prev = self.donating_attrs.get(attr, ())
+                                self.donating_attrs[attr] = tuple(
+                                    sorted(set(prev) | set(donate)))
+
+    def _bind_maker_results(self, m: ModuleSource) -> None:
+        """Second pass: ``step = make_train_step(...)`` binds a jit-maker's
+        result to a name — the name is a jitted callable and inherits the
+        maker's donated positions. Needs the maker maps from pass one."""
+        for node in ast.walk(m.tree):
+            if not isinstance(node, ast.Assign) or \
+                    not isinstance(node.value, ast.Call):
+                continue
+            maker = call_attr_name(node.value.func)
+            if maker not in self.jit_maker_methods or maker == "__init__":
+                continue
+            donate = self.donating_methods.get(maker, ())
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    k = (m.relpath, tgt.id)
+                    self.jit_names[k] = True
+                    if donate:
+                        self.donating_names.setdefault(k, donate)
+
+    # -- traced reachability -------------------------------------------------
+    def _mark_traced(self) -> None:
+        work: List[Tuple[FuncInfo, int]] = []
+        for i, e in enumerate(self.entries):
+            if e.target is not None:
+                work.append((e.target, i))
+        seen: Set[str] = set()
+        while work:
+            fi, origin = work.pop()
+            k = fi.key()
+            self.traced_via.setdefault(k, [])
+            if origin not in self.traced_via[k]:
+                self.traced_via[k].append(origin)
+            if k in seen:
+                continue
+            seen.add(k)
+            self.traced.add(k)
+            # nested defs run at trace time
+            for child in fi.children.values():
+                work.append((child, origin))
+            for callee in self._callees(fi):
+                work.append((callee, origin))
+
+    def _callees(self, fi: FuncInfo) -> List[FuncInfo]:
+        out: List[FuncInfo] = []
+        m = fi.module
+        body = fi.node.body if isinstance(fi.node.body, list) \
+            else [fi.node.body]
+        nested = {id(c.node) for c in fi.children.values()}
+
+        def walk(node):
+            for child in ast.iter_child_nodes(node):
+                if id(child) in nested:
+                    continue
+                if isinstance(child, ast.Call):
+                    cal = self._resolve_call(m, child, fi)
+                    if cal is not None:
+                        out.append(cal)
+                walk(child)
+
+        for stmt in body:
+            if isinstance(stmt, ast.Call):
+                cal = self._resolve_call(m, stmt, fi)
+                if cal is not None:
+                    out.append(cal)
+            walk(stmt)
+        return out
+
+    def _resolve_call(self, m: ModuleSource, call: ast.Call,
+                      scope: FuncInfo) -> Optional[FuncInfo]:
+        func = call.func
+        if isinstance(func, ast.Name):
+            return self.resolve_name(m, func.id, scope)
+        if isinstance(func, ast.Attribute):
+            if self.is_jaxish(m, func) or self.is_numpyish(m, func):
+                return None
+            if func.attr in ATTR_RESOLVE_BLOCKLIST:
+                return None
+            for cand in self.methods.get(func.attr, ()):
+                return cand      # first match: name-based heuristic
+        return None
+
+    # -- queries used by the rules -------------------------------------------
+    def is_traced(self, fi: FuncInfo) -> bool:
+        return fi.key() in self.traced
+
+    def enclosing_traced(self, fi: Optional[FuncInfo]) -> Optional[FuncInfo]:
+        while fi is not None:
+            if self.is_traced(fi):
+                return fi
+            fi = fi.parent
+        return None
+
+    def entry_static_for(self, fi: FuncInfo) -> Tuple[Set[int], Set[str]]:
+        """Union of static argnums/argnames over the entries wrapping fi."""
+        nums: Set[int] = set()
+        names: Set[str] = set()
+        for i in self.traced_via.get(fi.key(), ()):
+            e = self.entries[i]
+            if e.target is fi:
+                nums |= set(e.static_argnums)
+                names |= set(e.static_argnames)
+        return nums, names
+
+    def donated_positions(self, m: ModuleSource, call: ast.Call
+                          ) -> Tuple[int, ...]:
+        """Donated operand positions for this call expression, () if the
+        callee is not known to donate. Recognizes::
+
+            f(...)                  f/name assigned from jit(donate...)
+            self.attr(...)          attr assigned from jit(donate...)
+            self.attr[k](...)       dict-of-jits attribute
+            self.maker(...)(...)    jit-maker method call result
+            maker(...)(...)         module-level jit-maker
+            device_put(x, ..., donate=True)
+        """
+        func = call.func
+        if call_attr_name(func) == "device_put":
+            for kw in call.keywords:
+                if kw.arg == "donate" and \
+                        isinstance(kw.value, ast.Constant) and kw.value.value:
+                    return (0,)
+            return ()
+        if isinstance(func, ast.Name):
+            return self.donating_names.get((m.relpath, func.id), ())
+        target = func
+        while isinstance(target, ast.Subscript):
+            target = target.value
+        if isinstance(target, ast.Attribute):
+            return self.donating_attrs.get(target.attr, ())
+        if isinstance(target, ast.Call):
+            inner = call_attr_name(target.func)
+            return self.donating_methods.get(inner, ())
+        return ()
+
+    def is_jit_callable_ref(self, m: ModuleSource, func: ast.AST) -> bool:
+        """Does this call target evaluate to a jitted callable?"""
+        if isinstance(func, ast.Name):
+            return (m.relpath, func.id) in self.jit_names
+        target = func
+        while isinstance(target, ast.Subscript):
+            target = target.value
+        if isinstance(target, ast.Attribute):
+            return target.attr in self.jit_attrs
+        if isinstance(target, ast.Call):
+            return call_attr_name(target.func) in self.jit_maker_methods
+        return False
+
+    # -- artifact ------------------------------------------------------------
+    def to_json(self) -> dict:
+        return {
+            "entries": [e.to_json() for e in self.entries],
+            "traced_functions": {
+                k: {"reachable_from": [
+                    self.entries[i].to_json() | {"entry_index": i}
+                    for i in self.traced_via.get(k, ())[:4]]}
+                for k in sorted(self.traced)},
+            "kernel_roots": sorted(self.kernel_roots),
+            "donating_callables": {
+                "names": {f"{p}::{n}": list(v) for (p, n), v
+                          in sorted(self.donating_names.items())},
+                "attrs": {k: list(v) for k, v
+                          in sorted(self.donating_attrs.items())},
+                "jit_maker_methods": {
+                    k: list(self.donating_methods.get(k, ()))
+                    for k in sorted(self.jit_maker_methods)},
+            },
+        }

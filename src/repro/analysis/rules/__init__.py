@@ -1,0 +1,45 @@
+"""Rule registry.
+
+A rule is a callable ``(modules, graph) -> List[Finding]`` registered under
+a stable id. Rules see the whole scanned tree at once (plus the shared
+jit-boundary :class:`~repro.analysis.callgraph.CallGraph`) so cross-module
+checks — donation maps, config plumbing — need no per-rule re-parsing.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Sequence
+
+from repro.analysis.callgraph import CallGraph
+from repro.analysis.findings import Finding
+from repro.analysis.source import ModuleSource
+
+RuleFn = Callable[[Sequence[ModuleSource], CallGraph], List[Finding]]
+
+_REGISTRY: Dict[str, RuleFn] = {}
+_DOCS: Dict[str, str] = {}
+
+
+def rule(rule_id: str, doc: str) -> Callable[[RuleFn], RuleFn]:
+    def deco(fn: RuleFn) -> RuleFn:
+        if rule_id in _REGISTRY:
+            raise ValueError(f"duplicate rule id: {rule_id}")
+        _REGISTRY[rule_id] = fn
+        _DOCS[rule_id] = doc
+        return fn
+    return deco
+
+
+def all_rules() -> Dict[str, RuleFn]:
+    _load()
+    return dict(_REGISTRY)
+
+
+def rule_docs() -> Dict[str, str]:
+    _load()
+    return dict(_DOCS)
+
+
+def _load() -> None:
+    # import for side effect: each module registers its rule(s)
+    from repro.analysis.rules import (  # noqa: F401
+        config_drift, donation, host_sync, pallas_purity, recompile)

@@ -1,0 +1,169 @@
+"""R2 — donation/aliasing.
+
+``donate_argnums`` hands a buffer's memory to XLA: after the call, the
+Python reference still exists but the buffer is deleted. Reading it raises
+at runtime on GPU — and on CPU backends may silently *work*, so tests do
+not catch it. The repo leans on donation everywhere (decode KV caches, the
+slot-splice path, the staging→commit upload), always in the
+``x, bc = fn(p, bc)`` same-statement rebind shape; this rule flags any use
+of a donated operand *after* the donating call without an intervening
+rebind.
+
+Donating callables are resolved through the call graph's donation maps:
+names/attributes assigned from ``jit(..., donate_argnums=...)`` (including
+dict-of-jits like ``_splice_fns``), builder methods that return a jitted
+callable (``self._decode_pre(desc)(p, bc, ...)``), and
+``device_put(x, donate=True)``.
+
+The walk is per-function in statement order; branches are traversed
+linearly, so a donation in one branch shadows a sibling branch — when that
+is a false positive, suppress with a reason.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence
+
+from repro.analysis.callgraph import CallGraph, FuncInfo
+from repro.analysis.findings import Finding
+from repro.analysis.rules import rule
+from repro.analysis.source import ModuleSource
+
+
+def _path(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        b = _path(node.value)
+        return f"{b}.{node.attr}" if b else None
+    if isinstance(node, ast.Subscript):
+        b = _path(node.value)
+        if b is None:
+            return None
+        s = node.slice
+        if isinstance(s, ast.Name):
+            return f"{b}[{s.id}]"
+        if isinstance(s, ast.Constant):
+            return f"{b}[{s.value!r}]"
+        return f"{b}[?]"
+    if isinstance(node, ast.Starred):
+        return _path(node.value)
+    return None
+
+
+def _linear_stmts(stmts):
+    for s in stmts:
+        yield s
+        for attr in ("body", "orelse", "finalbody"):
+            inner = getattr(s, attr, None)
+            if inner:
+                yield from _linear_stmts(inner)
+        for h in getattr(s, "handlers", ()) or ():
+            yield from _linear_stmts(h.body)
+
+
+class _FnState:
+    def __init__(self, m: ModuleSource, fi: FuncInfo, graph: CallGraph,
+                 findings: List[Finding]):
+        self.m = m
+        self.fi = fi
+        self.graph = graph
+        self.findings = findings
+        self.donated: Dict[str, int] = {}      # path -> donation lineno
+
+    def flag_reads(self, expr: ast.AST) -> None:
+        if expr is None or not self.donated:
+            return
+        for node in ast.walk(expr):
+            if isinstance(node, (ast.Name, ast.Attribute, ast.Subscript)) \
+                    and isinstance(getattr(node, "ctx", None), ast.Load):
+                p = _path(node)
+                if p in self.donated:
+                    self.findings.append(Finding(
+                        rule="donation-aliasing", path=self.m.relpath,
+                        line=node.lineno, col=node.col_offset,
+                        message=f"'{p}' is read after being donated "
+                                "(donate_argnums) without an intervening "
+                                "rebind — the buffer no longer exists",
+                        hint="rebind the name from the donating call's "
+                             "result (x, buf = fn(p, buf)) or drop the "
+                             "donation for this operand",
+                        qualname=self.fi.qualname,
+                        code=self.m.line_text(node.lineno)))
+                    # one report per donation event
+                    self.donated.pop(p, None)
+
+    def record_donations(self, expr: ast.AST) -> None:
+        if expr is None:
+            return
+        for node in ast.walk(expr):
+            if not isinstance(node, ast.Call):
+                continue
+            for pos in self.graph.donated_positions(self.m, node):
+                if pos < len(node.args):
+                    p = _path(node.args[pos])
+                    if p:
+                        self.donated[p] = node.lineno
+
+    def clear_target(self, tgt: ast.AST) -> None:
+        if isinstance(tgt, (ast.Tuple, ast.List)):
+            for e in tgt.elts:
+                self.clear_target(e)
+            return
+        p = _path(tgt)
+        if p is not None:
+            self.donated.pop(p, None)
+            # rebinding a base name also revalidates paths rooted at it
+            for k in [k for k in self.donated
+                      if k.startswith(p + ".") or k.startswith(p + "[")]:
+                self.donated.pop(k, None)
+
+    def step(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, ast.Assign):
+            self.flag_reads(stmt.value)
+            self.record_donations(stmt.value)
+            for t in stmt.targets:
+                self.clear_target(t)
+        elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+            self.flag_reads(stmt.value)
+            if isinstance(stmt, ast.AugAssign):
+                self.flag_reads(stmt.target)
+            if stmt.value is not None:
+                self.record_donations(stmt.value)
+            self.clear_target(stmt.target)
+        elif isinstance(stmt, (ast.Expr, ast.Return)):
+            self.flag_reads(stmt.value)
+            if stmt.value is not None:
+                self.record_donations(stmt.value)
+        elif isinstance(stmt, (ast.If, ast.While)):
+            self.flag_reads(stmt.test)
+        elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self.flag_reads(stmt.iter)
+            self.clear_target(stmt.target)
+        elif isinstance(stmt, ast.Delete):
+            for t in stmt.targets:
+                self.clear_target(t)
+        elif isinstance(stmt, ast.Assert):
+            self.flag_reads(stmt.test)
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self.flag_reads(item.context_expr)
+
+
+@rule("donation-aliasing",
+      "use-after-donation: a donate_argnums operand is read again before "
+      "being rebound from the donating call's result")
+def check_donation(modules: Sequence[ModuleSource],
+                   graph: CallGraph) -> List[Finding]:
+    findings: List[Finding] = []
+    for fi in graph.functions:
+        if isinstance(fi.node, ast.Lambda):
+            continue
+        st = _FnState(fi.module, fi, graph, findings)
+        nested = {id(c.node) for c in fi.children.values()}
+        for stmt in _linear_stmts(fi.node.body):
+            if id(stmt) in nested or isinstance(
+                    stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            st.step(stmt)
+    return findings

@@ -1,0 +1,149 @@
+"""R4 — pallas-purity.
+
+A ``pallas_call`` kernel body executes on the accelerator grid: the only
+state it may touch is its ``Ref`` parameters, and the only calls it may
+make are jnp/lax/``pl`` ops. Anything else — module globals, Python I/O,
+host numpy, writes to non-Ref objects — either fails at lowering or, worse,
+runs once at trace time and silently disappears from the compiled kernel
+(a print that "works" under interpret mode and vanishes on hardware).
+
+Kernel bodies are the functions reachable from a ``pallas_call`` entry in
+the jit-boundary graph, including nested helpers (the ``pl.when`` pattern).
+Module-level ALL-CONSTANT bindings (``BLOCK = 128``) are fine; reads of any
+module-level name bound to a non-constant are flagged.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Sequence, Set
+
+from repro.analysis.callgraph import (CallGraph, FuncInfo, base_name,
+                                      call_attr_name)
+from repro.analysis.findings import Finding
+from repro.analysis.rules import rule
+from repro.analysis.rules.recompile import _locals_of, _own_body
+from repro.analysis.source import ModuleSource
+
+_IO_CALLS = {"print", "open", "input", "breakpoint"}
+_HOST_MODULES = {"os", "sys", "logging", "time", "random", "io", "pathlib"}
+
+
+_MUT_CTORS = {"list", "dict", "set", "defaultdict", "deque", "Counter"}
+
+
+def _constant_like(name: str, value: ast.AST) -> bool:
+    """A plain literal, or an ALL_CAPS scalar expression (NEG_INF =
+    jnp.finfo(...).min style) — trace-time constants, not state."""
+    if isinstance(value, ast.Constant):
+        return True
+    if not name.isupper():
+        return False
+    for node in ast.walk(value):
+        if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                             ast.DictComp, ast.SetComp)):
+            return False
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Name) and \
+                node.func.id in _MUT_CTORS:
+            return False
+    return True
+
+
+def _module_nonconst_globals(m: ModuleSource) -> Set[str]:
+    out: Set[str] = set()
+    for stmt in m.tree.body:
+        if isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                if isinstance(t, ast.Name) and \
+                        not _constant_like(t.id, stmt.value):
+                    out.add(t.id)
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            if isinstance(stmt.target, ast.Name) and \
+                    not _constant_like(stmt.target.id, stmt.value):
+                out.add(stmt.target.id)
+    return out
+
+
+def _kernel_functions(graph: CallGraph) -> List[FuncInfo]:
+    out = []
+    for fi in graph.functions:
+        idxs = graph.traced_via.get(fi.key(), ())
+        if any(graph.entries[i].kind == "pallas_call" for i in idxs):
+            out.append(fi)
+    return out
+
+
+@rule("pallas-purity",
+      "pallas_call kernel bodies touching globals, Python I/O, host "
+      "numpy, or non-Ref state")
+def check_pallas_purity(modules: Sequence[ModuleSource],
+                        graph: CallGraph) -> List[Finding]:
+    findings: List[Finding] = []
+    nonconst_cache: Dict[str, Set[str]] = {}
+    for fi in _kernel_functions(graph):
+        m = fi.module
+        if m.relpath not in nonconst_cache:
+            nonconst_cache[m.relpath] = _module_nonconst_globals(m)
+        nonconst = nonconst_cache[m.relpath]
+        # function/lambda names are callables, not state
+        callables = set(graph.module_scope.get(m.relpath, ()))
+        locals_ = _locals_of(fi)
+        # closure locals of enclosing builders (bf, act, …) are trace-time
+        # constants, not globals
+        p = fi.parent
+        while p is not None:
+            locals_ |= _locals_of(p)
+            p = p.parent
+
+        def emit(node, msg, hint):
+            findings.append(Finding(
+                rule="pallas-purity", path=m.relpath, line=node.lineno,
+                col=node.col_offset, message=msg, hint=hint,
+                qualname=fi.qualname, code=m.line_text(node.lineno)))
+
+        seen_globals: Set[str] = set()
+        for node in _own_body(fi):
+            if isinstance(node, ast.Global) or isinstance(node, ast.Nonlocal):
+                emit(node, "global/nonlocal statement in a Pallas kernel",
+                     "kernels may only write through Ref parameters")
+            elif isinstance(node, ast.Name) and \
+                    isinstance(node.ctx, ast.Load) and \
+                    node.id in nonconst and node.id not in locals_ and \
+                    node.id not in callables and \
+                    node.id not in seen_globals:
+                seen_globals.add(node.id)
+                emit(node,
+                     f"Pallas kernel reads module-level state '{node.id}'",
+                     "pass it in as a kernel operand or close over a "
+                     "constant; module state is invisible to the compiled "
+                     "kernel")
+            elif isinstance(node, ast.Call):
+                name = call_attr_name(node.func)
+                b = base_name(node.func)
+                if isinstance(node.func, ast.Name) and name in _IO_CALLS:
+                    emit(node, f"Python I/O call {name}() in a Pallas "
+                               "kernel",
+                         "runs once at trace time and vanishes from the "
+                         "compiled kernel; use pl.debug_print if you need "
+                         "in-kernel output")
+                elif b in _HOST_MODULES:
+                    emit(node, f"host-module call {b}.{name}() in a "
+                               "Pallas kernel",
+                         "kernels cannot call host Python; move this "
+                         "outside the pallas_call")
+                elif graph.is_numpyish(m, node.func):
+                    emit(node, f"host numpy call in a Pallas kernel "
+                               f"({b}.{name})",
+                         "use jnp/lax inside kernels; host numpy executes "
+                         "at trace time on the host")
+            elif isinstance(node, ast.Assign):
+                for t in node.targets:
+                    tb = base_name(t)
+                    if isinstance(t, (ast.Subscript, ast.Attribute)) and \
+                            tb and tb not in fi.params and \
+                            tb not in locals_:
+                        emit(t, f"Pallas kernel writes non-Ref state "
+                                f"'{tb}'",
+                             "only Ref parameters may be written inside a "
+                             "kernel")
+    return findings

@@ -1,0 +1,196 @@
+"""R1 — recompile-hazard.
+
+Inside functions reachable from a ``jax.jit`` / ``pallas_call`` /
+``shard_map`` entry point, three patterns either bake a stale Python value
+into the trace or force a retrace on every shape/value change:
+
+* **captured mutables** — the traced body reads a closure variable that the
+  enclosing scope builds as a mutable container *and* mutates. The trace
+  captures whatever the container held at trace time; later mutations are
+  silently ignored (or, if they change structure, retrace).
+* **host coercions** — ``float(x)`` / ``int(x)`` / ``bool(x)`` on a traced
+  value concretizes it: a trace-time error at best, a silent
+  recompile-per-value if the operand happens to be weakly typed.
+* **Python iteration over non-static args** — ``for e in xs`` unrolls the
+  loop over ``xs`` at trace time, so a different length means a different
+  program: one compile per container shape.
+
+Arguments declared static (``static_argnums`` / ``static_argnames`` on the
+entry point) are legitimate Python values and are exempt.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Sequence, Set
+
+from repro.analysis.callgraph import CallGraph, FuncInfo, base_name
+from repro.analysis.findings import Finding
+from repro.analysis.rules import rule
+from repro.analysis.source import ModuleSource
+
+_MUTATORS = {"append", "extend", "add", "pop", "update", "remove",
+             "insert", "clear", "setdefault", "popitem"}
+_MUTABLE_CTORS = {"list", "dict", "set", "defaultdict", "deque", "Counter"}
+_COERCIONS = {"float", "int", "bool"}
+
+
+def _own_body(fi: FuncInfo):
+    """Statements of fi excluding nested function/lambda bodies."""
+    nested = {id(c.node) for c in fi.children.values()}
+    body = fi.node.body if isinstance(fi.node.body, list) else [fi.node.body]
+
+    def walk(node):
+        for child in ast.iter_child_nodes(node):
+            if id(child) in nested or isinstance(
+                    child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.Lambda)):
+                continue
+            yield child
+            yield from walk(child)
+
+    for stmt in body:
+        yield stmt
+        yield from walk(stmt)
+
+
+def _locals_of(fi: FuncInfo) -> Set[str]:
+    out = set(fi.params)
+    for node in _own_body(fi):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            out.add(node.id)
+        elif isinstance(node, (ast.For, ast.AsyncFor)):
+            for n in ast.walk(node.target):
+                if isinstance(n, ast.Name):
+                    out.add(n.id)
+        elif isinstance(node, ast.comprehension):
+            for n in ast.walk(node.target):
+                if isinstance(n, ast.Name):
+                    out.add(n.id)
+    return out
+
+
+def _mutable_locals(fi: FuncInfo) -> Set[str]:
+    """Names this scope both builds as a mutable container and mutates."""
+    built: Set[str] = set()
+    mutated: Set[str] = set()
+    for node in _own_body(fi):
+        if isinstance(node, ast.Assign):
+            v = node.value
+            is_mut = isinstance(v, (ast.List, ast.Dict, ast.Set,
+                                    ast.ListComp, ast.DictComp, ast.SetComp))
+            if isinstance(v, ast.Call) and isinstance(v.func, ast.Name) \
+                    and v.func.id in _MUTABLE_CTORS:
+                is_mut = True
+            if is_mut:
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        built.add(t.id)
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr in _MUTATORS:
+            b = base_name(node.func.value)
+            if b:
+                mutated.add(b)
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Subscript):
+                    b = base_name(t)
+                    if b:
+                        mutated.add(b)
+        if isinstance(node, ast.AugAssign) and \
+                isinstance(node.target, (ast.Name, ast.Subscript)):
+            b = base_name(node.target)
+            if b:
+                mutated.add(b)
+    return built & mutated
+
+
+class _Ctx:
+    def __init__(self, fi: FuncInfo, graph: CallGraph):
+        self.fi = fi
+        self.locals = _locals_of(fi)
+        nums, names = graph.entry_static_for(fi)
+        self.static = set(names)
+        params = [p for p in fi.params]
+        for i in nums:
+            if 0 <= i < len(params):
+                self.static.add(params[i])
+        self.static.add("self")
+        self.traced_params = (set(fi.params) - self.static) - {"self"}
+
+
+def _jnp_call(graph: CallGraph, m: ModuleSource, node: ast.AST) -> bool:
+    return isinstance(node, ast.Call) and graph.is_jaxish(m, node.func)
+
+
+@rule("recompile-hazard",
+      "trace-time hazards under jit/pallas_call/shard_map: captured "
+      "mutables, float/int/bool coercions of traced values, Python "
+      "iteration over non-static arguments")
+def check_recompile(modules: Sequence[ModuleSource],
+                    graph: CallGraph) -> List[Finding]:
+    findings: List[Finding] = []
+    for fi in graph.functions:
+        if not graph.is_traced(fi):
+            continue
+        m = fi.module
+        ctx = _Ctx(fi, graph)
+        # captured mutables: free reads resolving to a mutated container
+        # built in an enclosing *function* scope
+        anc_mutables = {}
+        p = fi.parent
+        while p is not None:
+            for n in _mutable_locals(p):
+                anc_mutables.setdefault(n, p)
+            p = p.parent
+        reported: Set[str] = set()
+        for node in _own_body(fi):
+            if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load) \
+                    and node.id not in ctx.locals \
+                    and node.id in anc_mutables \
+                    and node.id not in reported:
+                reported.add(node.id)
+                findings.append(Finding(
+                    rule="recompile-hazard", path=m.relpath,
+                    line=node.lineno, col=node.col_offset,
+                    message=f"traced function reads closure variable "
+                            f"'{node.id}' that the enclosing scope builds "
+                            "as a mutable container and mutates",
+                    hint="pass it as an argument (static if it must stay a "
+                         "Python value) or freeze it to a tuple before "
+                         "tracing; the trace bakes in the value it saw",
+                    qualname=fi.qualname, code=m.line_text(node.lineno)))
+            elif isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Name) and \
+                    node.func.id in _COERCIONS and len(node.args) == 1:
+                arg = node.args[0]
+                hazardous = (
+                    (isinstance(arg, ast.Name)
+                     and arg.id in ctx.traced_params)
+                    or _jnp_call(graph, m, arg))
+                if hazardous:
+                    what = arg.id if isinstance(arg, ast.Name) \
+                        else "a jnp expression"
+                    findings.append(Finding(
+                        rule="recompile-hazard", path=m.relpath,
+                        line=node.lineno, col=node.col_offset,
+                        message=f"{node.func.id}() concretizes traced value "
+                                f"'{what}' inside a traced function",
+                        hint="keep the value on device (jnp ops) or declare "
+                             "the argument static on the jit entry point",
+                        qualname=fi.qualname,
+                        code=m.line_text(node.lineno)))
+            elif isinstance(node, (ast.For, ast.AsyncFor)) and \
+                    isinstance(node.iter, ast.Name) and \
+                    node.iter.id in ctx.traced_params:
+                findings.append(Finding(
+                    rule="recompile-hazard", path=m.relpath,
+                    line=node.lineno, col=node.col_offset,
+                    message=f"Python for-loop over non-static argument "
+                            f"'{node.iter.id}' unrolls at trace time — one "
+                            "compile per container length",
+                    hint="declare the argument static if its shape is a "
+                         "config constant, or rewrite with lax.scan / "
+                         "vectorized jnp ops",
+                    qualname=fi.qualname, code=m.line_text(node.lineno)))
+    return findings

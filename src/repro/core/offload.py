@@ -40,7 +40,6 @@ class OffloadConfig:
     cache_policy: str = "moe-infinity"   # | lru | lfu | neighbor | oracle
     prefetch: str = "moe-infinity"       # | none | topk | traced-topk | oracle
     prefetch_lookahead: int = 0          # 0 = all later layers (paper default)
-    max_inflight_queue: int = 0          # 0 = unbounded
     demand_overhead_s: float = 0.0       # per-demand fault overhead (UM)
     n_gpu_links: int = 1                 # parallel DRAM→device links (§7)
     # expert-parallel degree (DESIGN.md §8): >1 shards experts across D

@@ -35,6 +35,7 @@ from repro.core.tracer import build_eamc
 from repro.models import Model
 from repro.serving import EngineConfig, SchedulerConfig
 from repro.serving.engine import JaxModelServer
+from repro.serving.guard import recompile_guard
 from repro.serving.request import Request
 from repro.serving.workload import poisson_arrivals
 from repro.train.data import DataConfig, TokenStream
@@ -88,11 +89,28 @@ def main(argv=None):
     ap.add_argument("--ssd-iops", type=float, default=0.0,
                     help="NVMe read IOPS: each SSD read pays 1/iops s "
                          "setup on top of the bandwidth term (0 = ideal)")
+    ap.add_argument("--dram-gbps", type=float, default=None,
+                    help="DRAM→device link bandwidth in GB/s (the paper's "
+                         "PCIe sweep, Figure 10; default: the PAPER_8GPU "
+                         "preset)")
+    ap.add_argument("--gpu-links", type=int, default=1,
+                    help="parallel DRAM→device upload links the simulator "
+                         "charges transfers against (§7)")
+    ap.add_argument("--record-drift", action="store_true",
+                    help="record per-iteration router drift stats (adds "
+                         "host-side bookkeeping; off on the measured path)")
     ap.add_argument("--eamc-capacity", type=int, default=8)
     ap.add_argument("--eamc-online", action="store_true",
                     help="learn the EAMC from served traffic instead of the "
                          "offline warmup pass; without --eamc-path the "
                          "collection starts empty (cold start)")
+    ap.add_argument("--eamc-drift-threshold", type=float, default=0.6,
+                    help="EWMA match-distance threshold that declares "
+                         "workload drift and triggers an online EAMC "
+                         "rebuild (only with --eamc-online)")
+    ap.add_argument("--eamc-drift-min-seqs", type=int, default=8,
+                    help="completed sequences required before (and "
+                         "between) drift-triggered EAMC rebuilds")
     ap.add_argument("--eamc-path", default=None,
                     help="persisted EAMC (.npz): loaded at startup when the "
                          "file exists (warm restart) and rewritten at exit")
@@ -152,13 +170,19 @@ def main(argv=None):
                      ssd_to_dram_gbps=(args.ssd_gbps if args.ssd_gbps
                                        is not None else hw.ssd_to_dram_gbps),
                      ssd_iops=args.ssd_iops)
+    if args.dram_gbps is not None:
+        hw = replace(hw, dram_to_dev_gbps=args.dram_gbps)
     srv = JaxModelServer(
         EngineConfig(arch=cfg, gpu_cache_experts=args.gpu_cache,
                      dram_cache_experts=args.dram_cache, hw=hw,
                      scheduler=SchedulerConfig(max_batch=args.slots,
                                                policy=args.policy),
                      keep_request_eams=False,
+                     record_drift=args.record_drift,
+                     n_gpu_links=args.gpu_links,
                      eamc_online=args.eamc_online,
+                     eamc_drift_threshold=args.eamc_drift_threshold,
+                     eamc_drift_min_seqs=args.eamc_drift_min_seqs,
                      resident_fraction=args.resident_fraction,
                      n_weight_slots=args.weight_slots,
                      transfer_dtype=args.transfer_dtype,
@@ -181,7 +205,12 @@ def main(argv=None):
         reqs.append(Request(rid=i, arrival=float(arrivals[i]), prompt=prompt,
                             max_new_tokens=budget))
         srv.submit(reqs[-1])
-    srv.drain()
+    # every jit entry (decode step, each prefill bucket, slot splices) may
+    # trace exactly once across the whole run; a steady-state retrace
+    # raises RecompileError instead of silently stalling the pipeline
+    with recompile_guard(srv, max_traces_per_key=1):
+        srv.drain()
+    print(f"guard: zero-recompile ok (keys={len(srv.compile_counts)})")
 
     stats = srv.stats()
     for r in reqs:

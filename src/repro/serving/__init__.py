@@ -1,5 +1,7 @@
 from repro.serving.engine import (  # noqa: F401
     EngineConfig, JaxModelServer, ServingEngine, StepEngine)
+from repro.serving.guard import (  # noqa: F401
+    RecompileError, recompile_guard)
 from repro.serving.scheduler import (  # noqa: F401
     ContinuousScheduler, Scheduler, SchedulerConfig, StaticBatchScheduler,
     make_scheduler)

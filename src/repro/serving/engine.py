@@ -37,6 +37,8 @@ from repro.core.offload import OffloadConfig, OffloadEngine
 from repro.core.tracer import SequenceTracer
 from repro.serving.perf_model import (expert_bytes, layer_cost,
                                       layer_time_mixed)
+from repro.serving.guard import (RecompileError, bump_trace_count,
+                                 recompile_guard)
 from repro.serving.request import DECODE, DONE, PREFILL, Request
 from repro.serving.scheduler import (ContinuousScheduler, SchedulerConfig,
                                      make_scheduler)
@@ -597,7 +599,8 @@ class JaxModelServer(StepEngine):
         return min(_pow2_bucket(S), self.cache_len)
 
     def _count(self, key) -> None:
-        self.compile_counts[key] = self.compile_counts.get(key, 0) + 1
+        bump_trace_count(self.compile_counts, key,
+                         getattr(self, "_trace_limit", None))
 
     def _get_step_fn(self):
         if self._step_fn is None:

@@ -54,6 +54,7 @@ import numpy as np
 
 from repro.core.slot_cache import ExpertSlotCache, HostExpertStore
 from repro.models.moe import route
+from repro.serving.guard import bump_trace_count
 
 
 class SlotStreamRuntime:
@@ -162,7 +163,8 @@ class SlotStreamRuntime:
 
     # -- jit bookkeeping -----------------------------------------------------
     def _count(self, key) -> None:
-        self.compile_counts[key] = self.compile_counts.get(key, 0) + 1
+        bump_trace_count(self.compile_counts, key,
+                         getattr(self, "_trace_limit", None))
 
     def _fn(self, key, builder):
         f = self._fns.get(key)

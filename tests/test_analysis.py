@@ -1,0 +1,572 @@
+"""Tests for the repro.analysis static invariant checker (DESIGN.md §9).
+
+Each rule gets at least one true-positive fixture (the bad idiom is
+flagged) and one true-negative fixture (the sanctioned idiom is clean).
+Fixtures live in strings and are written to a temp tree, so the linter's
+own run over ``tests/`` never parses them as comments or code.
+
+Also covered: suppression parsing, baseline round-trip, the jit-boundary
+map artifact, the runtime recompile guard, and the self-check that the
+committed tree lints clean against the committed baseline.
+"""
+import ast
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.baseline import (
+    Baseline, BaselineError, TODO_REASON, write_baseline)
+from repro.analysis.lint import DEFAULT_BASELINE, run_lint
+from repro.analysis.source import ModuleSource
+from repro.serving.guard import (
+    RecompileError, bump_trace_count, recompile_guard)
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _lint(tmp_path, files, select=None, baseline=None):
+    for rel, text in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(text), encoding="utf-8")
+    return run_lint([tmp_path], root=tmp_path, baseline=baseline,
+                    select=select)
+
+
+def _hits(res, rule):
+    return [f for f in res.new_findings if f.rule == rule]
+
+
+# ---------------------------------------------------------------- R1 --------
+
+R1_BAD = """
+    import jax
+
+    def make(cfg):
+        table = {}
+        table["k"] = 2
+
+        def impl(x):
+            return x * table["k"]
+
+        return jax.jit(impl)
+
+    def coerce(x):
+        return float(x) + 1.0
+
+    coerce_j = jax.jit(coerce)
+
+    def unrolled(xs):
+        s = 0
+        for v in xs:
+            s = s + v
+        return s
+
+    unrolled_j = jax.jit(unrolled)
+"""
+
+R1_GOOD = """
+    import functools
+
+    import jax
+
+    @functools.partial(jax.jit, static_argnames=("n",))
+    def tiled(x, n):
+        acc = x
+        for _ in range(int(n)):
+            acc = acc + x
+        return acc
+"""
+
+
+def test_recompile_hazard_true_positives(tmp_path):
+    res = _lint(tmp_path, {"mod.py": R1_BAD}, select=["recompile-hazard"])
+    msgs = [f.message for f in _hits(res, "recompile-hazard")]
+    assert any("closure variable" in m and "table" in m for m in msgs), msgs
+    assert any("float() concretizes" in m for m in msgs), msgs
+    assert any("for-loop over non-static" in m for m in msgs), msgs
+
+
+def test_recompile_hazard_true_negative(tmp_path):
+    res = _lint(tmp_path, {"mod.py": R1_GOOD}, select=["recompile-hazard"])
+    assert _hits(res, "recompile-hazard") == []
+
+
+# ---------------------------------------------------------------- R2 --------
+
+R2_BAD = """
+    import jax
+
+    step = jax.jit(lambda c, x: (c + x, x), donate_argnums=(0,))
+
+    def run(cache, x):
+        out, y = step(cache, x)
+        return cache + out
+"""
+
+R2_GOOD = """
+    import jax
+
+    step = jax.jit(lambda c, x: (c + x, x), donate_argnums=(0,))
+
+    def run(cache, x):
+        out, cache = step(cache, x)
+        return cache + out
+"""
+
+
+def test_donation_aliasing_true_positive(tmp_path):
+    res = _lint(tmp_path, {"mod.py": R2_BAD}, select=["donation-aliasing"])
+    hits = _hits(res, "donation-aliasing")
+    assert len(hits) == 1 and "'cache' is read after being donated" \
+        in hits[0].message, hits
+
+
+def test_donation_aliasing_same_statement_rebind_is_clean(tmp_path):
+    res = _lint(tmp_path, {"mod.py": R2_GOOD}, select=["donation-aliasing"])
+    assert _hits(res, "donation-aliasing") == []
+
+
+# ---------------------------------------------------------------- R3 --------
+# host-sync only scans src/repro (minus the linter itself), so fixtures
+# sit at that relative path inside the temp root.
+
+R3_BAD = """
+    import jax
+
+    step = jax.jit(lambda x: x * 2)
+
+    def loop(x):
+        y = step(x)
+        return float(y)
+"""
+
+R3_GOOD = """
+    import jax
+
+    step = jax.jit(lambda x: x * 2)
+
+    def loop(x):
+        y = step(x)
+        return y
+"""
+
+
+def test_host_sync_true_positive(tmp_path):
+    res = _lint(tmp_path, {"src/repro/badsync.py": R3_BAD},
+                select=["host-sync"])
+    hits = _hits(res, "host-sync")
+    assert len(hits) == 1 and "outside a declared fence point" \
+        in hits[0].message, hits
+
+
+def test_host_sync_true_negative(tmp_path):
+    res = _lint(tmp_path, {"src/repro/oksync.py": R3_GOOD},
+                select=["host-sync"])
+    assert _hits(res, "host-sync") == []
+
+
+def test_host_sync_declared_fence_is_exempt(tmp_path):
+    # Same sync, but inside a function covered by DECLARED_FENCES
+    # (serving/slot_runtime.py :: SlotStreamRuntime.decode).
+    fenced = """
+        import jax
+
+        step = jax.jit(lambda x: x * 2)
+
+        class SlotStreamRuntime:
+            def decode(self, x):
+                y = step(x)
+                return float(y)
+    """
+    res = _lint(tmp_path, {"src/repro/serving/slot_runtime.py": fenced},
+                select=["host-sync"])
+    assert _hits(res, "host-sync") == []
+
+
+# ---------------------------------------------------------------- R4 --------
+
+R4_BAD = """
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    state = {"scale": 2.0}
+
+    def _kernel(x_ref, o_ref):
+        print("trace")
+        o_ref[...] = x_ref[...] * state["scale"]
+
+    def call(x):
+        return pl.pallas_call(_kernel, out_shape=x)(x)
+"""
+
+R4_GOOD = """
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    NEG_INF = -1e30
+
+    def _kernel(x_ref, o_ref):
+        v = x_ref[...]
+        o_ref[...] = jnp.maximum(v, NEG_INF)
+
+    def call(x):
+        return pl.pallas_call(_kernel, out_shape=x)(x)
+"""
+
+
+def test_pallas_purity_true_positives(tmp_path):
+    res = _lint(tmp_path, {"mod.py": R4_BAD}, select=["pallas-purity"])
+    msgs = [f.message for f in _hits(res, "pallas-purity")]
+    assert any("print" in m for m in msgs), msgs
+    assert any("state" in m for m in msgs), msgs
+
+
+def test_pallas_purity_constant_read_is_clean(tmp_path):
+    res = _lint(tmp_path, {"mod.py": R4_GOOD}, select=["pallas-purity"])
+    assert _hits(res, "pallas-purity") == []
+
+
+# ---------------------------------------------------------------- R5 --------
+
+R5_BAD = """
+    from dataclasses import dataclass
+
+    @dataclass
+    class WidgetConfig:
+        used_knob: int = 1
+        dead_knob: int = 2
+
+    def consume(cfg):
+        return cfg.used_knob
+"""
+
+R5_PLUMBED = {
+    "src/widget.py": """
+        from dataclasses import dataclass
+
+        @dataclass
+        class EngineConfig:
+            n_widgets: int = 4
+
+        def consume(cfg):
+            return cfg.n_widgets
+    """,
+    "src/launch/serve.py": """
+        import argparse
+
+        from widget import EngineConfig
+
+        def main():
+            ap = argparse.ArgumentParser()
+            ap.add_argument("--n-widgets", type=int, default=4)
+            args = ap.parse_args()
+            return EngineConfig(n_widgets=args.n_widgets)
+    """,
+}
+
+
+def test_config_drift_flags_dead_field(tmp_path):
+    res = _lint(tmp_path, {"mod.py": R5_BAD}, select=["config-drift"])
+    msgs = [f.message for f in _hits(res, "config-drift")]
+    assert any("WidgetConfig.dead_knob is never read" in m for m in msgs), msgs
+    assert not any("used_knob" in m for m in msgs), msgs
+
+
+def test_config_drift_flags_unplumbed_engine_field(tmp_path):
+    # EngineConfig is one of the plumbed classes: a field that is read but
+    # has no argparse/launch path is flagged as "not settable".
+    files = {"src/widget.py": R5_PLUMBED["src/widget.py"]}
+    res = _lint(tmp_path, files, select=["config-drift"])
+    msgs = [f.message for f in _hits(res, "config-drift")]
+    assert any("EngineConfig.n_widgets is not settable" in m
+               for m in msgs), msgs
+
+
+def test_config_drift_plumbed_field_is_clean(tmp_path):
+    res = _lint(tmp_path, R5_PLUMBED, select=["config-drift"])
+    assert _hits(res, "config-drift") == []
+
+
+# ------------------------------------------------------- suppressions -------
+
+
+def test_inline_suppression_absorbs_finding(tmp_path):
+    text = R2_BAD.replace(
+        "return cache + out",
+        "return cache + out  # repro-lint: disable=donation-aliasing "
+        "-- fixture: aliasing is intentional here")
+    res = _lint(tmp_path, {"mod.py": text}, select=["donation-aliasing"])
+    assert res.new_findings == []
+    assert len(res.suppressed) == 1
+    assert "aliasing is intentional" in res.suppressed[0]["reason"]
+
+
+def test_standalone_suppression_covers_next_line(tmp_path):
+    text = R2_BAD.replace(
+        "        return cache + out",
+        "        # repro-lint: disable=all -- fixture: next line is "
+        "sanctioned\n"
+        "        return cache + out")
+    res = _lint(tmp_path, {"mod.py": text}, select=["donation-aliasing"])
+    assert res.new_findings == [] and len(res.suppressed) == 1
+
+
+def test_suppression_without_reason_is_a_finding(tmp_path):
+    res = _lint(tmp_path, {"mod.py": """
+        x = 1  # repro-lint: disable=host-sync
+    """})
+    hits = _hits(res, "suppression")
+    assert len(hits) == 1 and "without a reason" in hits[0].message
+
+
+def test_suppression_naming_unknown_rule_is_a_finding(tmp_path):
+    res = _lint(tmp_path, {"mod.py": """
+        x = 1  # repro-lint: disable=no-such-rule -- because
+    """})
+    hits = _hits(res, "suppression")
+    assert len(hits) == 1 and "unknown rule" in hits[0].message
+    assert "no-such-rule" in hits[0].message
+
+
+def test_directive_inside_string_is_ignored(tmp_path):
+    res = _lint(tmp_path, {"mod.py": '''
+        DOC = """
+        example:  # repro-lint: disable=host-sync
+        """
+    '''})
+    m = ModuleSource(tmp_path / "mod.py", tmp_path)
+    assert m.suppressions == [] and m.suppression_findings == []
+    assert res.new_findings == []
+
+
+def test_parse_error_is_a_finding(tmp_path):
+    res = _lint(tmp_path, {"mod.py": "def f(:\n    pass\n"})
+    assert [f.rule for f in res.new_findings] == ["parse-error"]
+    assert res.exit_code == 1
+
+
+def test_unused_suppression_warns(tmp_path):
+    res = _lint(tmp_path, {"mod.py": """
+        x = 1  # repro-lint: disable=host-sync -- nothing here actually syncs
+    """})
+    assert any("unused suppression" in w for w in res.warnings)
+
+
+# ------------------------------------------------------------ baseline ------
+
+
+def test_baseline_round_trip(tmp_path):
+    res = _lint(tmp_path, {"mod.py": R2_BAD}, select=["donation-aliasing"])
+    assert len(res.new_findings) == 1
+    bpath = tmp_path / "b.json"
+    write_baseline(bpath, res.new_findings)
+
+    # Freshly written baselines carry TODO reasons, which the loader
+    # rejects: grandfathering requires a human-written justification.
+    with pytest.raises(BaselineError, match="no real reason"):
+        Baseline.load(bpath)
+
+    doc = json.loads(bpath.read_text())
+    assert doc["entries"][0]["reason"] == TODO_REASON
+    doc["entries"][0]["reason"] = "fixture: sanctioned aliasing"
+    bpath.write_text(json.dumps(doc))
+
+    res2 = _lint(tmp_path, {}, select=["donation-aliasing"],
+                 baseline=Baseline.load(bpath))
+    assert res2.new_findings == [] and len(res2.baselined) == 1
+    assert res2.baselined[0]["reason"] == "fixture: sanctioned aliasing"
+    assert res2.exit_code == 0
+
+
+def test_baseline_rejects_missing_fields():
+    with pytest.raises(BaselineError, match="missing fields"):
+        Baseline([{"rule": "host-sync", "path": "x.py"}])
+
+
+def test_stale_baseline_entry_warns(tmp_path):
+    bl = Baseline([{"rule": "host-sync", "path": "gone.py", "code": "x",
+                    "message": "no longer fires", "count": 1,
+                    "reason": "fixture: entry for a deleted file"}])
+    res = _lint(tmp_path, {"mod.py": "x = 1\n"}, baseline=bl)
+    assert any("stale baseline entry" in w for w in res.warnings)
+
+
+def test_write_baseline_carries_reasons_forward(tmp_path):
+    res = _lint(tmp_path, {"mod.py": R2_BAD}, select=["donation-aliasing"])
+    bpath = tmp_path / "b.json"
+    write_baseline(bpath, res.new_findings)
+    doc = json.loads(bpath.read_text())
+    doc["entries"][0]["reason"] = "fixture: kept across rewrites"
+    bpath.write_text(json.dumps(doc))
+    old = Baseline.load(bpath)
+    doc2 = write_baseline(bpath, res.new_findings, old=old)
+    assert doc2["entries"][0]["reason"] == "fixture: kept across rewrites"
+
+
+# ------------------------------------------------------------- jit map ------
+
+
+def test_jit_map_artifact_shape(tmp_path):
+    res = _lint(tmp_path, {"mod.py": R4_BAD, "mod2.py": R2_BAD})
+    doc = res.graph.to_json()
+    kinds = {e["kind"] for e in doc["entries"]}
+    assert {"jit", "pallas_call"} <= kinds
+    assert any(k.endswith("::_kernel") for k in doc["kernel_roots"])
+    donating = doc["donating_callables"]["names"]
+    assert any(k.endswith("::step") and v == [0]
+               for k, v in donating.items()), donating
+
+
+# ----------------------------------------------------------------- CLI ------
+
+
+def _run_cli(args, cwd):
+    env = {**os.environ, "PYTHONPATH": str(REPO / "src")}
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", *args],
+        cwd=cwd, env=env, capture_output=True, text=True)
+
+
+def test_cli_exit_codes_and_json(tmp_path):
+    bad = tmp_path / "tree"
+    bad.mkdir()
+    (bad / "mod.py").write_text(textwrap.dedent(R2_BAD))
+    report = tmp_path / "report.json"
+
+    proc = _run_cli(["--no-baseline", "--json", str(report), str(bad)],
+                    cwd=tmp_path)
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    doc = json.loads(report.read_text())
+    assert doc["summary"]["new"] == 1
+    assert doc["findings"][0]["rule"] == "donation-aliasing"
+
+    proc = _run_cli(["--no-baseline", "--select", "host-sync", str(bad)],
+                    cwd=tmp_path)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+    proc = _run_cli(["--baseline", str(tmp_path / "missing.json"), str(bad)],
+                    cwd=tmp_path)
+    assert proc.returncode == 2
+
+    proc = _run_cli(["--list-rules"], cwd=tmp_path)
+    assert proc.returncode == 0
+    for rid in ("recompile-hazard", "donation-aliasing", "host-sync",
+                "pallas-purity", "config-drift"):
+        assert rid in proc.stdout
+
+
+# ---------------------------------------------------------- self-check ------
+
+
+def test_repo_lints_clean_against_committed_baseline():
+    bl = Baseline.load(REPO / DEFAULT_BASELINE)
+    res = run_lint([REPO / "src", REPO / "benchmarks", REPO / "tests"],
+                   root=REPO, baseline=bl)
+    assert res.new_findings == [], \
+        "\n".join(f.format() for f in res.new_findings)
+    assert res.exit_code == 0
+
+
+def test_committed_baseline_reasons_are_real():
+    doc = json.loads((REPO / DEFAULT_BASELINE).read_text())
+    for e in doc["entries"]:
+        reason = str(e["reason"]).strip()
+        assert reason and not reason.startswith("TODO"), e
+
+
+def test_analysis_package_is_stdlib_only():
+    # Satellite constraint: the linter must not grow dependencies —
+    # every import in repro.analysis resolves to the stdlib or repro itself.
+    stdlib = set(sys.stdlib_module_names)
+    for p in sorted((REPO / "src" / "repro" / "analysis").rglob("*.py")):
+        tree = ast.parse(p.read_text(encoding="utf-8"))
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                tops = [a.name.split(".")[0] for a in node.names]
+            elif isinstance(node, ast.ImportFrom) and node.level == 0:
+                tops = [(node.module or "").split(".")[0]]
+            else:
+                continue
+            for t in tops:
+                assert t in stdlib or t == "repro", \
+                    f"{p.name}: non-stdlib import {t!r}"
+
+
+def test_linter_loads_no_third_party_modules():
+    code = (
+        "import sys\n"
+        "import repro.analysis.lint\n"
+        "heavy = ('numpy', 'jax', 'jaxlib', 'scipy', 'flax', 'optax')\n"
+        "bad = sorted({m.split('.')[0] for m in sys.modules\n"
+        "              if m.split('.')[0] in heavy})\n"
+        "assert not bad, bad\n")
+    env = {**os.environ, "PYTHONPATH": str(REPO / "src")}
+    subprocess.run([sys.executable, "-c", code], check=True, env=env)
+
+
+# ----------------------------------------------------- recompile guard ------
+
+
+class _StubRuntime:
+    pass
+
+
+class _StubServer:
+    """Mimics JaxModelServer's trace-counting surface."""
+
+    def __init__(self):
+        self.compile_counts = {}
+        self.slot_runtime = _StubRuntime()
+
+    def _count(self, key):
+        bump_trace_count(self.compile_counts, key,
+                         getattr(self, "_trace_limit", None))
+
+
+def test_bump_trace_count_limit():
+    counts = {}
+    bump_trace_count(counts, "k", None)
+    bump_trace_count(counts, "k", None)     # unlimited: never raises
+    assert counts["k"] == 2
+    counts = {}
+    bump_trace_count(counts, "k", 1)
+    with pytest.raises(RecompileError, match="traced 2 times"):
+        bump_trace_count(counts, "k", 1)
+
+
+def test_recompile_guard_arms_server_and_runtime():
+    srv = _StubServer()
+    srv._count("decode")                    # warmup compile, unguarded
+    with recompile_guard(srv, max_traces_per_key=1) as guarded:
+        assert guarded is srv
+        assert srv._trace_limit == 1
+        assert srv.slot_runtime._trace_limit == 1
+        srv._count("prefill[8]")            # first compile of a new key: ok
+        with pytest.raises(RecompileError):
+            srv._count("decode")            # steady-state retrace: raises
+    assert srv._trace_limit is None
+    assert srv.slot_runtime._trace_limit is None
+
+
+def test_recompile_guard_restores_limit_on_error():
+    srv = _StubServer()
+    with pytest.raises(RuntimeError, match="boom"):
+        with recompile_guard(srv):
+            raise RuntimeError("boom")
+    assert srv._trace_limit is None
+
+
+def test_recompile_guard_without_slot_runtime():
+    class _Bare:
+        compile_counts = {}
+    srv = _Bare()
+    srv.slot_runtime = None
+    with recompile_guard(srv, max_traces_per_key=3):
+        assert srv._trace_limit == 3
+    assert srv._trace_limit is None

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.serving import EngineConfig, SchedulerConfig
+from repro.serving import EngineConfig, SchedulerConfig, recompile_guard
 from repro.serving.engine import JaxModelServer
 from repro.serving.request import Request
 from repro.serving.scheduler import ContinuousScheduler
@@ -113,10 +113,13 @@ def test_zero_recompiles_across_admission_waves(model_and_params):
     assert warm.get("decode_step") == 1
     assert warm.get(("prefill", 8)) == 1 and warm.get(("prefill", 16)) == 1
 
-    # three more waves of churn through the same (recycled) slots
-    wave(10, [(6, 3), (11, 7), (7, 4)])
-    wave(20, [(4, 5), (16, 4), (8, 8)])
-    wave(30, [(9, 2), (5, 6), (13, 3)])
+    # three more waves of churn through the same (recycled) slots, armed:
+    # any retrace raises RecompileError at the offending jit entry instead
+    # of only failing the count comparison below
+    with recompile_guard(srv, max_traces_per_key=1):
+        wave(10, [(6, 3), (11, 7), (7, 4)])
+        wave(20, [(4, 5), (16, 4), (8, 8)])
+        wave(30, [(9, 2), (5, 6), (13, 3)])
     assert srv.compile_counts == warm          # zero recompiles after warmup
     assert sorted(srv._free) == list(range(3))  # every slot recycled
 
