@@ -7,14 +7,24 @@ paper-faithful baseline, per EXPERIMENTS.md §Perf):
 2. quantized expert transfers (fp16-over-fp32 wire format) — the paper
    lists quantization as complementary (§9); here only the *transfer* is
    compressed, compute dtype unchanged;
-3. both combined.
+3. both combined;
+4. ``--predictor``: learned expert-activation prediction (DESIGN.md §10) —
+   the drift-scenario head-to-head of the EAMC against the per-layer
+   n-gram ``LearnedPredictor`` and the hybrid that arbitrates between them
+   on match distance. The paper's EAMC assumes the serving distribution is
+   covered by the collection; the learned model keeps adapting after the
+   task mix shifts, so it recovers faster on the post-drift phase.
 """
 from __future__ import annotations
 
+import argparse
+
 import numpy as np
 
-from benchmarks.common import (build_eamc, build_engine, build_oracle, emit,
-                               run_workload)
+from benchmarks.common import (build_eamc, build_engine, build_oracle,
+                               dump_json, emit, run_phased_workload,
+                               run_workload, scenario_phases,
+                               start_json_capture)
 from repro.configs import get_config
 
 VARIANTS = [
@@ -24,6 +34,56 @@ VARIANTS = [
     ("+int8-wire", dict(transfer_dtype="int8")),
     ("+4links+fp16", dict(n_gpu_links=4, transfer_dtype="fp16")),
 ]
+
+# predictor head-to-head variants (drift scenario, one engine per variant):
+# frozen-eamc = yesterday's collection with online learning off — the
+# paper-faithful deployment that quietly degrades when traffic shifts.
+PREDICTOR_VARIANTS = [
+    ("frozen-eamc", dict(eamc_mode="offline")),
+    ("online-eamc", dict(eamc_mode="online")),
+    ("learned", dict(eamc_mode="online", predictor="learned")),
+    ("hybrid", dict(eamc_mode="offline", predictor="hybrid")),
+]
+
+
+def run_predictor_headtohead(quick=True, arch_id="switch-base-128"):
+    """Drift replay in the experts-≫-DRAM regime (NVMe 3.5 GB/s, DRAM 150
+    slots, rps 1.0 — the run_lifecycle_scenario defaults) comparing the
+    prediction backends behind the same prefetch/cache/admission/placement
+    consumers. Offline variants peek only at the pre-drift task subset, so
+    phase 1 shows the cost of a cold start and phase 2 the cost of a stale
+    collection."""
+    phases = scenario_phases("drift", n_tasks=6)
+    n = 16 if quick else 40
+    hit = {}
+    for label, extra in PREDICTOR_VARIANTS:
+        oracle = build_oracle(get_config(arch_id), n_tasks=6)
+        kw = dict(extra)
+        if kw.get("eamc_mode") == "offline":
+            kw["eamc_tasks"] = phases[0]   # "yesterday's" traces only
+        eng = build_engine(arch_id, "moe-infinity", oracle=oracle,
+                           dram_slots=150, ssd_gbps=3.5, eamc_capacity=24,
+                           **kw)
+        res = run_phased_workload(eng, phases, n_per_phase=n, rps=1.0)
+        for pi, ph in enumerate(res):
+            hit[(label, pi)] = ph["hit"]
+            tag = f"beyond/predictor/{label}/phase{pi}"
+            emit(f"{tag}/hit", round(ph["hit"], 3), "ratio",
+                 f"demand={ph['demand']}")
+            emit(f"{tag}/tok-lat", round(float(ph["lat"].mean()) * 1000, 2),
+                 "ms/token")
+        s = eng.stats()
+        emit(f"beyond/predictor/{label}/trained",
+             s.get("predictor_seqs_trained", 0), "seqs",
+             f"kind={s['predictor']} eamc={s['eamc_entries']}")
+    # the drift claim: a frozen collection degrades on the shifted mix; the
+    # learned predictor keeps training through the shift and recovers
+    emit("beyond/predictor/learned-vs-frozen-phase1",
+         round(hit[("learned", 1)] - hit[("frozen-eamc", 1)], 3), "hit",
+         ">0 = learned adapts where frozen EAMC stays stale")
+    emit("beyond/predictor/hybrid-vs-frozen-phase1",
+         round(hit[("hybrid", 1)] - hit[("frozen-eamc", 1)], 3), "hit",
+         ">=0 = arbitration never worse than its frozen half")
 
 
 def main(quick=True):
@@ -60,4 +120,25 @@ def main(quick=True):
 
 
 if __name__ == "__main__":
-    main(quick=False)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--predictor", action="store_true",
+                    help="run the predictor head-to-head (frozen/online "
+                         "EAMC vs learned vs hybrid on the drift replay) "
+                         "instead of the links/wire variants")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also dump the emitted rows as a JSON document "
+                         "('-' = stdout); the CI BENCH tier asserts it "
+                         "parses")
+    args = ap.parse_args()
+    if args.json:
+        start_json_capture()
+    if args.predictor:
+        if not args.full:
+            print("# quick predictor head-to-head (16 reqs/phase); pass "
+                  "--full for 40/phase")
+        run_predictor_headtohead(quick=not args.full)
+    else:
+        main(quick=not args.full)
+    if args.json:
+        dump_json(args.json)

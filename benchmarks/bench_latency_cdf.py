@@ -40,7 +40,7 @@ def run_scenario(scenario, quick=True, arch="switch-large-128", **kw):
 
 def main(quick=True, scheduling="continuous", policy="prefill",
          arch="switch-large-128", ssd_gbps=None, dram_cache=None,
-         transfer_dtype="fp32"):
+         transfer_dtype="fp32", predictor="eamc"):
     n = 30 if quick else 100
     modes = ["static", "continuous"] if scheduling == "both" else [scheduling]
     # cache-only = the demand-fetch ablation (same activation-aware cache,
@@ -51,7 +51,8 @@ def main(quick=True, scheduling="continuous", policy="prefill",
                 eng = build_engine(arch, system,
                                    scheduling=mode, policy=policy,
                                    ssd_gbps=ssd_gbps, dram_slots=dram_cache,
-                                   transfer_dtype=transfer_dtype)
+                                   transfer_dtype=transfer_dtype,
+                                   predictor=predictor)
                 reqs = run_workload(eng, n_requests=n, rps=rps, seed=11)
                 stats = eng.stats()
                 lat = np.array(eng.token_latencies) * 1000
@@ -88,6 +89,11 @@ if __name__ == "__main__":
     ap.add_argument("--transfer-dtype", default="fp32",
                     choices=["fp32", "fp16", "int8"],
                     help="expert wire dtype for the simulated transfers")
+    ap.add_argument("--predictor", default="eamc",
+                    choices=["eamc", "learned", "hybrid"],
+                    help="expert-activation predictor backing prefetch, "
+                         "cache scoring, admission, and placement "
+                         "(DESIGN.md §10)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also dump the emitted rows as a JSON document "
                          "('-' = stdout); the CI BENCH tier asserts it "
@@ -107,13 +113,14 @@ if __name__ == "__main__":
         if args.scheduling != "both":
             kw["scheduling"] = args.scheduling
         run_scenario(args.scenario, quick=not args.full, arch=args.arch,
-                     policy=args.policy, **kw)
+                     policy=args.policy, predictor=args.predictor, **kw)
     else:
         if not args.full:
             print("# quick mode (30 requests); pass --full for the "
                   "paper-scale Fig 5 CDFs")
         main(quick=not args.full, scheduling=args.scheduling,
              policy=args.policy, arch=args.arch, ssd_gbps=args.ssd_gbps,
-             dram_cache=args.dram_cache, transfer_dtype=args.transfer_dtype)
+             dram_cache=args.dram_cache, transfer_dtype=args.transfer_dtype,
+             predictor=args.predictor)
     if args.json:
         dump_json(args.json)

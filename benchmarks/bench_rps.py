@@ -156,7 +156,7 @@ def run_device_sweep(devices, quick=True, arch_id="switch-base-128",
 
 
 def main(quick=True, scheduling="continuous", policy="prefill",
-         ssd_gbps=None, dram_cache=None):
+         ssd_gbps=None, dram_cache=None, predictor="eamc"):
     rps_list = [0.5, 2.0] if quick else [0.5, 1.0, 2.0, 4.0, 8.0]
     models = MODELS[:2] if quick else MODELS
     n = 24 if quick else 80
@@ -169,7 +169,8 @@ def main(quick=True, scheduling="continuous", policy="prefill",
                 for mode in modes:
                     eng = build_engine(model, system, scheduling=mode,
                                        policy=policy, ssd_gbps=ssd_gbps,
-                                       dram_slots=dram_cache)
+                                       dram_slots=dram_cache,
+                                       predictor=predictor)
                     reqs = run_workload(eng, n_requests=n, rps=rps)
                     stats = eng.stats()
                     lat = stats["mean_token_latency"]
@@ -221,6 +222,11 @@ if __name__ == "__main__":
                     help="EAMC-lifecycle replay instead of the rps sweep: "
                          "two phases on one engine, offline-oracle vs "
                          "online-learned vs no-EAMC")
+    ap.add_argument("--predictor", default="eamc",
+                    choices=["eamc", "learned", "hybrid"],
+                    help="expert-activation predictor backing prefetch, "
+                         "cache scoring, admission, and placement "
+                         "(DESIGN.md §10)")
     ap.add_argument("--resident-fraction", default=None,
                     help="comma-separated device expert-slot fractions "
                          "(e.g. 0.1,0.2,0.5): sweep per-token latency vs "
@@ -281,13 +287,13 @@ if __name__ == "__main__":
         if args.scheduling != "both":
             kw["scheduling"] = args.scheduling
         run_scenario(args.scenario, quick=not args.full,
-                     policy=args.policy, **kw)
+                     policy=args.policy, predictor=args.predictor, **kw)
     else:
         if not args.full:
             print("# quick mode (2 models x 2 rates); pass --full for the "
                   "paper-scale Fig 4 sweep")
         main(quick=not args.full, scheduling=args.scheduling,
              policy=args.policy, ssd_gbps=args.ssd_gbps,
-             dram_cache=args.dram_cache)
+             dram_cache=args.dram_cache, predictor=args.predictor)
     if args.json:
         dump_json(args.json)

@@ -74,7 +74,7 @@ def build_engine(arch_id="switch-base-128", system="moe-infinity", *,
                  keep_request_eams=False, ssd_gbps=None, ssd_iops=None,
                  tier_aware=True, eamc_mode="offline", eamc_path=None,
                  eamc_capacity=32, eamc_tasks=None, resident_fraction=None,
-                 transfer_dtype="fp32", n_devices=1):
+                 transfer_dtype="fp32", n_devices=1, predictor="eamc"):
     """``eamc_mode`` selects the EAMC lifecycle (DESIGN.md §4):
 
     * ``"offline"`` — oracle-peek construction before serving (the seed-era
@@ -140,6 +140,7 @@ def build_engine(arch_id="switch-base-128", system="moe-infinity", *,
                        tier_aware=tier_aware,
                        transfer_dtype=transfer_dtype,
                        n_devices=n_devices,
+                       predictor=predictor,
                        eamc_online=eamc_mode in ("online", "path"))
     prefetcher = None
     if prefetch == "topk":

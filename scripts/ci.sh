@@ -8,9 +8,10 @@
 #                            # end to end (slot-pool engine, ragged
 #                            # requests, Poisson arrivals, expert slot
 #                            # cache) under a timeout
-#   BENCH=1 scripts/ci.sh    # additionally run one reduced bench_rps and
-#                            # one reduced bench_latency_cdf point and
-#                            # assert they emit valid JSON (bitrot guard)
+#   BENCH=1 scripts/ci.sh    # additionally run reduced bench_rps,
+#                            # bench_latency_cdf, and bench_beyond
+#                            # (predictor head-to-head) points and assert
+#                            # they emit valid JSON (bitrot guard)
 #
 # CI_LOG_DIR=<dir>           # tee serve/bench reports there (uploaded as
 #                            # workflow artifacts)
@@ -182,6 +183,42 @@ assert e2 > 0, "warm restart lost the persisted entries"
 assert h2 + 1e-9 >= h1, f"warm-restart hit ratio regressed: {h2} < {h1}"
 print(f"ci.sh: eamc lifecycle OK (entries {e1}->{e2}, hit {h1:.3f}->{h2:.3f})")
 PY
+
+    # learned predictor (DESIGN.md §10): cold start trains the per-layer
+    # n-gram model online, the second run must resume from the persisted
+    # .npz with nonzero learned state and keep training
+    echo "ci.sh: SMOKE tier — learned predictor cold start + warm restart"
+    scratch PRED_TMP
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout "${SMOKE_TIMEOUT:-300}" \
+        python -m repro.launch.serve --reduced --requests 4 \
+        --predictor learned --predictor-path "$PRED_TMP/pred" \
+        | tee "$PRED_TMP/run1.log" | log_tee serve_pred_cold.log
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout "${SMOKE_TIMEOUT:-300}" \
+        python -m repro.launch.serve --reduced --requests 4 \
+        --predictor learned --predictor-path "$PRED_TMP/pred" \
+        | tee "$PRED_TMP/run2.log" | log_tee serve_pred_warm.log
+    python - "$PRED_TMP/run1.log" "$PRED_TMP/run2.log" <<'PY'
+import re, sys
+
+def parse(p):
+    s = open(p).read()
+    m = re.search(r"predictor: kind=(\w+) source=(\w+) seqs=(\d+)", s)
+    assert m, f"{p}: no predictor report line"
+    saved = re.search(r"predictor: saved seqs=(\d+)", s)
+    assert saved, f"{p}: predictor state was not persisted"
+    assert "guard: zero-recompile ok" in s, \
+        f"{p}: recompile_guard line missing under the learned predictor"
+    return m.group(1), m.group(2), int(m.group(3)), int(saved.group(1))
+
+k1, s1, n1, v1 = parse(sys.argv[1])
+k2, s2, n2, v2 = parse(sys.argv[2])
+assert k1 == k2 == "learned", f"predictor kinds wrong: {k1}/{k2}"
+assert s1 == "cold" and s2 == "load", f"lifecycle sources wrong: {s1}/{s2}"
+assert v1 > 0, "cold-start run trained no sequences"
+assert n2 >= v1 and v2 > v1, \
+    f"warm restart lost learned state: loaded {n2}, saved {v1}->{v2}"
+print(f"ci.sh: learned predictor OK (seqs {v1}->{v2}, warm source={s2})")
+PY
 fi
 
 if [ -n "${BENCH:-}" ]; then
@@ -203,8 +240,15 @@ if [ -n "${BENCH:-}" ]; then
         --json "$BENCH_TMP/devices.json" | log_tee bench_device_sweep.log
     # the PR-7 trajectory point: the device-sweep emits, archived by name
     [ -n "$LOG_DIR" ] && cp "$BENCH_TMP/devices.json" "$LOG_DIR/BENCH_7.json"
+    echo "ci.sh: BENCH tier — predictor head-to-head on the drift replay"
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout "${BENCH_TIMEOUT:-600}" \
+        python -m benchmarks.bench_beyond --predictor \
+        --json "$BENCH_TMP/beyond.json" | log_tee bench_predictor.log
+    # the PR-9 trajectory point: the predictor head-to-head, archived by name
+    [ -n "$LOG_DIR" ] && cp "$BENCH_TMP/beyond.json" "$LOG_DIR/BENCH_9.json"
     python - "$BENCH_TMP/rps.json" "$BENCH_TMP/cdf.json" \
-        "$BENCH_TMP/wire.json" "$BENCH_TMP/devices.json" <<'PY'
+        "$BENCH_TMP/wire.json" "$BENCH_TMP/devices.json" \
+        "$BENCH_TMP/beyond.json" <<'PY'
 import json, sys
 
 for p in sys.argv[1:]:
@@ -243,6 +287,20 @@ n_rates = int(mono[0]["derived"].split()[1])
 assert mono[0]["value"] == n_rates, \
     f"device-sweep stall not monotone with D: {mono[0]}"
 print(f"ci.sh: device sweep stall monotone at all {n_rates} rates OK")
+
+# predictor head-to-head (DESIGN.md §10): on the post-drift phase the
+# frozen EAMC degrades (stale collection) while the learned predictor
+# keeps training through the shift — it must stay clearly ahead
+with open(sys.argv[5]) as f:
+    rows = {r["name"]: r["value"] for r in json.load(f)["rows"]}
+frozen = rows["beyond/predictor/frozen-eamc/phase1/hit"]
+learned = rows["beyond/predictor/learned/phase1/hit"]
+assert learned >= 0.64, \
+    f"learned predictor post-drift hit {learned} below the 0.64 floor"
+assert learned > frozen, \
+    f"learned predictor did not beat the frozen EAMC: {learned} <= {frozen}"
+print(f"ci.sh: predictor head-to-head OK (post-drift hit: "
+      f"learned={learned} > frozen={frozen})")
 PY
 fi
 

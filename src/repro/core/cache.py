@@ -40,20 +40,30 @@ class ActivationAwareCache(CachePolicy):
     ``(cur_eam[l][e]/Σ_e cur_eam[l] + ε) · (1 − l/L)``.
 
     Per §6.2 ("closely aligning the caching strategy with the prefetching
-    priorities") the activation ratio also sees the EAMC-*predicted* ratios
-    of the ongoing inference: an expert the prefetcher expects to need soon
-    scores as if already observed, so early-iteration arrivals cannot evict
-    the sequence's soon-to-run experts (the refetch ping-pong otherwise
-    costs ~40% extra demand fetches in our replay)."""
+    priorities") the activation ratio also sees the *predicted* ratios of
+    the ongoing inference — the ``ExpertPredictor``'s batch-merged
+    prediction (DESIGN.md §10), the same signal the prefetcher ranks by:
+    an expert the prefetcher expects to need soon scores as if already
+    observed, so early-iteration arrivals cannot evict the sequence's
+    soon-to-run experts (the refetch ping-pong otherwise costs ~40% extra
+    demand fetches in our replay)."""
 
     name = "moe-infinity"
 
-    def __init__(self, ctx):
-        self.ctx = ctx  # SequenceContext: .cur_eam (L,E), .predicted_ratios
+    def __init__(self, ctx, predictor=None):
+        self.ctx = ctx  # SequenceContext: .cur_eam (L,E)
+        # the prediction brain; standalone constructions (tests, ablations)
+        # fall back to ctx.predicted_ratios for the predicted term
+        self.predictor = predictor
+
+    def _pred(self) -> Optional[np.ndarray]:
+        if self.predictor is not None:
+            return self.predictor.batch_probs()
+        return getattr(self.ctx, "predicted_ratios", None)
 
     def scores(self, cached: List[Key]) -> np.ndarray:
         eam = self.ctx.cur_eam
-        pred = getattr(self.ctx, "predicted_ratios", None)
+        pred = self._pred()
         n_layers = eam.shape[0]
         layer_tokens = eam.sum(axis=1)                     # (L,)
         out = np.empty(len(cached))
@@ -158,13 +168,13 @@ class ReuseAwareDRAMCache(LRUCache):
 
     name = "reuse-dram"
 
-    def __init__(self, ctx):
+    def __init__(self, ctx, predictor=None):
         super().__init__()
-        self.aa = ActivationAwareCache(ctx)
+        self.aa = ActivationAwareCache(ctx, predictor)
 
     def victim(self, cached, protected=frozenset()):
         eam = self.aa.ctx.cur_eam
-        pred = getattr(self.aa.ctx, "predicted_ratios", None)
+        pred = self.aa._pred()
         cold = [k for k in cached if k not in protected
                 and eam[k[0], k[1]] == 0
                 and (pred is None or pred[k[0], k[1]] <= 0)]

@@ -23,6 +23,7 @@ from repro.core.cache import (ActivationAwareCache, CachePolicy, ExpertCache,
                               OracleCache, ReuseAwareDRAMCache)
 from repro.core.eam import EAMC
 from repro.core.memsim import DRAM, GPU, HWConfig, MemSim, PAPER_8GPU, SSD
+from repro.core.predictor import ExpertPredictor, make_predictor
 from repro.core.prefetch import (ActivationAwarePrefetcher, Prefetcher,
                                  SequenceContext)
 
@@ -69,6 +70,12 @@ class OffloadConfig:
     eamc_online: bool = False
     eamc_drift_threshold: float = 0.6    # EWMA Eq.(1) distance ⇒ drift
     eamc_drift_min_seqs: int = 8         # warmup + min gap between rebuilds
+    # the prediction brain behind cache scoring, prefetch priorities, stall
+    # admission, and placement heat (DESIGN.md §10): "eamc" is the paper's
+    # trace matcher (bit-identical to the pre-refactor code paths),
+    # "learned" the online bigram/marginal model, "hybrid" trace-matches
+    # while the match distance is good and falls back to the learned model
+    predictor: str = "eamc"              # | learned | hybrid
 
 
 class OffloadEngine:
@@ -76,7 +83,8 @@ class OffloadEngine:
                  eamc: Optional[EAMC] = None,
                  prefetcher: Optional[Prefetcher] = None,
                  cache_policy: Optional[CachePolicy] = None,
-                 oracle_future: Optional[List[Key]] = None):
+                 oracle_future: Optional[List[Key]] = None,
+                 predictor: Optional[ExpertPredictor] = None):
         self.cfg = cfg
         self.ctx = SequenceContext(cfg.n_moe_layers, cfg.n_experts)
         # rid-keyed per-request contexts; ``self.ctx`` is the incrementally
@@ -84,17 +92,35 @@ class OffloadEngine:
         self.seq_ctxs: Dict[Hashable, SequenceContext] = {}
         self.eamc = eamc if eamc is not None else EAMC(capacity=128)
 
+        # the one prediction brain (DESIGN.md §10): cache scoring, prefetch
+        # priorities, stall admission, and placement heat all consume it.
+        # A caller-supplied instance wins (warm restarts, tests).
+        if predictor is None:
+            predictor = make_predictor(
+                cfg.predictor, self.eamc,
+                n_layers=cfg.n_moe_layers, n_experts=cfg.n_experts,
+                online=cfg.eamc_online,
+                drift_threshold=cfg.eamc_drift_threshold,
+                drift_min_seqs=cfg.eamc_drift_min_seqs)
+        self.predictor = predictor
+
         if prefetcher is not None:
             self.prefetcher = prefetcher
         elif cfg.prefetch == "moe-infinity":
-            self.prefetcher = ActivationAwarePrefetcher(self.eamc)
+            self.prefetcher = ActivationAwarePrefetcher(self.predictor)
         else:
             self.prefetcher = Prefetcher()  # on-demand only
+        # drift telemetry + reconstruction only make sense when an
+        # activation-aware prefetcher actually consumes the predictions
+        # (matches the pre-refactor ``isinstance`` gating in
+        # ``_eamc_lifecycle``)
+        self.predictor.track_drift = isinstance(self.prefetcher,
+                                                ActivationAwarePrefetcher)
 
         if cache_policy is not None:
             gpu_policy: CachePolicy = cache_policy
         elif cfg.cache_policy == "moe-infinity":
-            gpu_policy = ActivationAwareCache(self.ctx)
+            gpu_policy = ActivationAwareCache(self.ctx, self.predictor)
         elif cfg.cache_policy == "lru":
             gpu_policy = LRUCache()
         elif cfg.cache_policy == "lfu":
@@ -112,7 +138,7 @@ class OffloadEngine:
         # plain LRU for baselines
         self.dram_cache = ExpertCache(
             cfg.dram_cache_experts,
-            ReuseAwareDRAMCache(self.ctx)
+            ReuseAwareDRAMCache(self.ctx, self.predictor)
             if cfg.cache_policy == "moe-infinity" else LRUCache())
 
         from repro.core import quant
@@ -143,7 +169,6 @@ class OffloadEngine:
         self.prefetcher.tier_weight = (self.sim.tier_weight
                                        if cfg.tier_aware else None)
         self._protected: frozenset = frozenset()
-        self._seqs_since_reconstruct = 0
         self.warm_start()
 
         # stats
@@ -276,9 +301,14 @@ class OffloadEngine:
         """A request joins the running set; its per-sequence EAM starts."""
         if rid in self.seq_ctxs:
             return self.seq_ctxs[rid]
-        if not self.seq_ctxs and \
-                isinstance(self.prefetcher, ActivationAwarePrefetcher):
-            self.prefetcher.start_sequence()   # fresh inference procedure
+        if not self.seq_ctxs:
+            # fresh inference procedure: reset per-procedure prediction
+            # state (the prefetcher cascades into its predictor; with a
+            # prediction-free prefetcher the predictor is reset directly)
+            if isinstance(self.prefetcher, ActivationAwarePrefetcher):
+                self.prefetcher.start_sequence()
+            else:
+                self.predictor.start_sequence()
         ctx = SequenceContext(self.cfg.n_moe_layers, self.cfg.n_experts)
         self.seq_ctxs[rid] = ctx
         return ctx
@@ -297,54 +327,29 @@ class OffloadEngine:
         self.prefetcher.observe(ctx)
         if record_drift:
             self.eamc.record_for_reconstruction(eam)
-        self._eamc_lifecycle(eam)
+        # the predictor's per-completed-sequence learning step (DESIGN.md
+        # §10): for the EAMC brain this is the §4.3 online lifecycle —
+        # drift telemetry, insert-or-merge, bounded reconstruction — and
+        # for every brain it also folds the EAM into the shared placement
+        # heat EWMA. Runs at the sequence boundary — nothing here touches
+        # the per-layer hot path.
+        self.predictor.finish_seq(eam)
         if self.placement is not None:
-            # placement learns from the same finish_seq stream as the EAMC:
-            # re-home by fresh EWMA loads, then top up hot-expert replicas
-            self.placement.observe(eam)
+            # placement learns from the same finish_seq stream as the
+            # predictor: adopt its fresh heat EWMA as the load estimate,
+            # re-home by LPT, then top up hot-expert replicas
+            self.placement.set_load(self.predictor.placement_heat())
             self.placement.rebalance()
             self.placement.replicate()
         if not self.seq_ctxs:
             # engine idle: the inference procedure is over — drop its
-            # prefetch queue (Algorithm 1's ``q`` is procedure-scoped) and
-            # clear residual float fuzz in the combined EAM
+            # prefetch queue (Algorithm 1's ``q`` is procedure-scoped),
+            # clear residual float fuzz in the combined EAM, and reset the
+            # predictor's per-procedure state (batch-merged prediction)
             self.ctx.reset()
+            self.predictor.start_sequence()
             self.sim.clear_queues()
         return eam
-
-    # -- online EAMC lifecycle (§4.3 / DESIGN.md §4) ---------------------------
-    def _eamc_lifecycle(self, eam: np.ndarray) -> None:
-        """Per-completed-sequence lifecycle step: record the sequence's final
-        match distance (drift telemetry), learn the EAM into the collection
-        (online mode), and run a bounded background reconstruction when the
-        drift EWMA says match quality has degraded. Runs at the sequence
-        boundary — nothing here touches the per-layer hot path."""
-        if eam.sum() <= 0:
-            return  # a sequence that never routed a token carries no signal
-        pf = self.prefetcher
-        aware = isinstance(pf, ActivationAwarePrefetcher)
-        nearest, dist = None, None
-        if self.eamc.entries and (aware or self.cfg.eamc_online):
-            nearest, dist = self.eamc.lookup(eam)
-            if aware:
-                pf.note_distance(dist)
-        if not self.cfg.eamc_online:
-            return
-        verdict = self.eamc.online_update(eam, nearest=nearest, dist=dist)
-        self._seqs_since_reconstruct += 1
-        if verdict == "insert" and aware:
-            # the collection grew: the novel pattern is now represented, so
-            # distances measured before the insert (the cold-start warmup
-            # state) must not count as drift evidence
-            pf.reset_drift_signal()
-            return
-        if (aware
-                and self._seqs_since_reconstruct >= self.cfg.eamc_drift_min_seqs
-                and pf.ewma_n >= self.cfg.eamc_drift_min_seqs
-                and pf.ewma_distance > self.cfg.eamc_drift_threshold):
-            self.eamc.reconstruct()
-            self._seqs_since_reconstruct = 0
-            pf.reset_drift_signal()
 
     # -- the per-layer hot path (Algorithm 1) -----------------------------------
     def on_layer(self, layer_idx: int, token_counts: np.ndarray,
@@ -386,8 +391,11 @@ class OffloadEngine:
             if ratios is not None:
                 pred_merged = (ratios if pred_merged is None
                                else np.maximum(pred_merged, ratios))
-        # §6.2 alignment: the cache scores see the batch-merged prediction
-        self.ctx.predicted_ratios = pred_merged
+        # §6.2 alignment: one predictor lifecycle tick per MoE layer — the
+        # batch-merged prediction feeds Alg-2 cache scoring (victim_score /
+        # batch_probs) and the combined routing is the online training
+        # signal for learned brains
+        self.predictor.observe_iteration(layer_idx, combined, pred_merged)
         for key, pr in merged.items():
             self.sim.submit_prefetch(key, pr)
 
@@ -425,11 +433,13 @@ class OffloadEngine:
     # -- metrics ------------------------------------------------------------------
     def stats(self) -> dict:
         sim = self.sim
-        pf = self.prefetcher
-        mean_dist = (pf.mean_match_distance
-                     if isinstance(pf, ActivationAwarePrefetcher)
-                     else float("nan"))
+        # drift telemetry lives on the predictor now; trace-free brains
+        # (and prediction-free prefetchers, which never feed the EWMA)
+        # report nan exactly like the pre-refactor non-aware path
+        mean_dist = float(self.predictor.mean_match_distance)
         return {
+            "predictor": self.predictor.name,
+            **self.predictor.stats(),
             "eamc_entries": len(self.eamc.entries),
             "eamc_online_inserts": self.eamc.n_online_inserts,
             "eamc_online_merges": self.eamc.n_online_merges,

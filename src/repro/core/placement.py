@@ -60,13 +60,27 @@ class ExpertPlacement:
     def observe(self, eam) -> None:
         """Fold one finished sequence's EAM (L, E) activation matrix into
         the EWMA load estimate (row-normalized so long sequences don't
-        dominate)."""
+        dominate). Standalone/test entry point — the offload engine feeds
+        placement via ``set_load`` from the ``ExpertPredictor``'s shared
+        heat EWMA instead (DESIGN.md §10), which applies this exact update
+        to the same finish_seq stream."""
         m = np.asarray(eam, np.float64)
         if m.shape != self.load.shape:
             return
         s = m.sum(axis=1, keepdims=True)
         m = np.divide(m, np.maximum(s, 1e-12))
         self.load = self.decay * self.load + (1.0 - self.decay) * m
+        self.seqs_observed += 1
+
+    def set_load(self, heat) -> None:
+        """Adopt the predictor-maintained heat EWMA as this placement's
+        load estimate (one finished sequence's worth of learning)."""
+        if heat is None:
+            return
+        m = np.asarray(heat, np.float64)
+        if m.shape != self.load.shape:
+            return
+        self.load = m
         self.seqs_observed += 1
 
     # -- placement decisions -------------------------------------------------

@@ -1,9 +1,9 @@
 """Activation-aware expert prefetching — Algorithm 1 (§5).
 
-The prefetcher owns the in-flight sequence context (cur_eam), consults the
-EAMC for the nearest historical activation pattern, and (re)submits prefetch
-requests for experts in layers *after* the currently executing one with
-priority
+The prefetcher owns the in-flight sequence context (cur_eam), asks its
+``ExpertPredictor`` (DESIGN.md §10 — the EAMC nearest-pattern matcher by
+default) for predicted activation ratios, and (re)submits prefetch requests
+for experts in layers *after* the currently executing one with priority
 
     p = (predicted_activation_ratio + ε) · (1 − layer_idx / n_layers)
 
@@ -20,6 +20,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.eam import EAMC, eam_distance
+from repro.core.predictor import EAMCPredictor, ExpertPredictor
 
 EPSILON = 1e-4
 Key = Tuple[int, int]
@@ -75,93 +76,58 @@ class Prefetcher:
 
 
 class ActivationAwarePrefetcher(Prefetcher):
-    """Algorithm 1's PREFETCH (steps 15-27)."""
+    """Algorithm 1's PREFETCH (steps 15-27), generic over the prediction
+    brain: the predictor supplies per-sequence activation ratios and raw
+    Alg-1 priorities; the prefetcher layers the oneshot-vs-refine ablation
+    and tier weighting on top. Constructing it from a bare ``EAMC`` wraps
+    the collection in an ``EAMCPredictor`` (the classic paper behavior)."""
 
     name = "moe-infinity"
 
-    def __init__(self, eamc: EAMC, *, refine: bool = True,
+    def __init__(self, predictor, *, refine: bool = True,
                  include_zero_ratio: bool = False):
         # include_zero_ratio=True enqueues even predicted-inactive experts
         # (pure-epsilon priorities). The paper's Alg. 1 scores them for queue
         # *ordering*, but its measured prefetch-traffic reduction (§8.2:
         # "7 GB out of 13 GB") implies they are not actually transferred;
         # default False keeps the link for predicted-active experts.
-        self.eamc = eamc
+        if isinstance(predictor, EAMC):
+            predictor = EAMCPredictor(predictor)
+        self.predictor: ExpertPredictor = predictor
         self.refine = refine
         self.include_zero_ratio = include_zero_ratio
         self._oneshot_plan: Optional[list] = None
         self.last_distance = float("nan")
         self.last_match_ratios: Optional[np.ndarray] = None
-        # drift telemetry (§4.3): EWMA + running mean over *sequence-final*
-        # match distances, fed by the offload engine at finish_seq. The EWMA
-        # is the reconstruction trigger; sequence-final distances are used
-        # because early-layer lookups carry a constant offset from the
-        # still-unobserved layers (see eam_distance) that would swamp it.
-        self.ewma_alpha = 0.25
-        self.ewma_distance = float("nan")
-        self.ewma_n = 0            # samples since the last drift reset
-        self.distance_sum = 0.0
-        self.distance_n = 0
+
+    @property
+    def eamc(self) -> Optional[EAMC]:
+        """The backing collection when the brain is EAMC-based (benchmark
+        and test convenience; None for trace-free predictors)."""
+        return getattr(self.predictor, "eamc", None)
 
     def start_sequence(self) -> None:
         self._oneshot_plan = None
         # a fresh inference procedure must not inherit the previous
         # procedure's predicted ratios into Alg-2 cache scoring
         self.last_match_ratios = None
-
-    def note_distance(self, d: float) -> None:
-        """Record one completed sequence's final match distance."""
-        if not np.isfinite(d):
-            return
-        self.distance_sum += d
-        self.distance_n += 1
-        self.ewma_n += 1
-        a = self.ewma_alpha
-        self.ewma_distance = (d if np.isnan(self.ewma_distance)
-                              else (1 - a) * self.ewma_distance + a * d)
-
-    def reset_drift_signal(self) -> None:
-        """Called when the collection changes shape (an online insert or a
-        reconstruction): distances measured against the previous collection
-        no longer describe the current one, so match quality is re-measured
-        fresh instead of averaging across the boundary."""
-        self.ewma_distance = float("nan")
-        self.ewma_n = 0
-
-    @property
-    def mean_match_distance(self) -> float:
-        return (self.distance_sum / self.distance_n if self.distance_n
-                else float("nan"))
+        self.predictor.start_sequence()
 
     def plan(self, ctx: SequenceContext, cur_layer: int):
         if not self.refine and self._oneshot_plan is not None:
             # one-shot ablation: keep the first prediction (§8.3)
             return [(k, p) for (k, p, l) in self._oneshot_plan if l > cur_layer]
-        p_eam, d = self.eamc.lookup(ctx.cur_eam)            # steps 16-21
-        self.last_distance = d
-        if p_eam is None:
-            # empty/young EAMC (the online cold-start state): there is no
-            # prediction — clearing here keeps a stale previous match from
-            # leaking into pred_merged / cache scores
-            self.last_match_ratios = None
+        probs = self.predictor.predict(ctx)                 # steps 16-21
+        self.last_distance = self.predictor.last_distance
+        self.last_match_ratios = probs
+        if probs is None:
+            # no prediction (empty/young EAMC, untrained model): nothing to
+            # stage, and last_match_ratios stays cleared so a stale previous
+            # match cannot leak into pred_merged / cache scores
             return []
-        sums = p_eam.sum(axis=1, keepdims=True)
-        self.last_match_ratios = np.divide(
-            p_eam, sums, out=np.zeros_like(p_eam, dtype=np.float64),
-            where=sums > 0)
-        L = ctx.n_layers
-        out = []
-        for fl in range(cur_layer + 1, L):                  # step 22
-            n_token = p_eam[fl].sum()                       # step 23
-            if n_token <= 0:
-                continue
-            ratios = p_eam[fl] / n_token                    # step 25
-            decay = 1.0 - fl / L                            # step 26
-            for e in range(ctx.n_experts):
-                if ratios[e] <= 0 and not self.include_zero_ratio:
-                    continue
-                pr = (ratios[e] + EPSILON) * decay * self._w((fl, e))
-                out.append(((fl, e), pr))
+        out = [(key, pr * self._w(key))                     # steps 22-26
+               for key, pr in self.predictor.prefetch_priorities(
+                   ctx, cur_layer, include_zero=self.include_zero_ratio)]
         if not self.refine and self._oneshot_plan is None:
             self._oneshot_plan = [(k, p, k[0]) for (k, p) in out]
         return out

@@ -31,6 +31,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.eam import EAMC
 from repro.core.memsim import PAPER_8GPU
+from repro.core.predictor import LearnedPredictor
 from repro.core.tracer import build_eamc
 from repro.models import Model
 from repro.serving import EngineConfig, SchedulerConfig
@@ -114,6 +115,19 @@ def main(argv=None):
     ap.add_argument("--eamc-path", default=None,
                     help="persisted EAMC (.npz): loaded at startup when the "
                          "file exists (warm restart) and rewritten at exit")
+    ap.add_argument("--predictor", default="eamc",
+                    choices=["eamc", "learned", "hybrid"],
+                    help="prediction brain behind cache scoring, prefetch "
+                         "priorities, stall admission, and placement "
+                         "(DESIGN.md §10): the EAMC trace matcher "
+                         "(default, the paper's behavior), the online "
+                         "learned bigram/marginal model, or the hybrid "
+                         "that trace-matches while the match is good")
+    ap.add_argument("--predictor-path", default=None,
+                    help="persisted learned-predictor state (.npz, "
+                         "learned/hybrid only): loaded at startup when the "
+                         "file exists (warm restart) and rewritten at exit "
+                         "— the learned-brain counterpart of --eamc-path")
     ap.add_argument("--devices", type=int, default=1,
                     help="expert-parallel degree (DESIGN.md §8): shard "
                          "experts over D mesh devices with one slot cache "
@@ -187,9 +201,22 @@ def main(argv=None):
                      n_weight_slots=args.weight_slots,
                      transfer_dtype=args.transfer_dtype,
                      fenced_uploads=args.fenced_uploads,
-                     n_devices=args.devices),
+                     n_devices=args.devices,
+                     predictor=args.predictor),
         model, params, eamc=eamc,
         cache_len=args.prompt_len + args.max_new)
+
+    # learned-predictor warm restart (the --eamc-path pattern): the engine
+    # already constructed the brain from the config; persisted model state
+    # streams into it in place
+    # eamc brains inherit the collection's provenance; learned state is
+    # cold unless --predictor-path warm-restarts it below
+    predictor_source = eamc_source if args.predictor == "eamc" else "cold"
+    if args.predictor_path and args.predictor in ("learned", "hybrid"):
+        lp_path = LearnedPredictor._resolve_path(args.predictor_path)
+        if os.path.exists(lp_path):
+            srv.offload.predictor.load_state(args.predictor_path)
+            predictor_source = "load"
 
     # open loop: every request is submitted up front with its Poisson
     # arrival timestamp; the engine's virtual clock drives admission
@@ -269,9 +296,15 @@ def main(argv=None):
           f"merge={stats['eamc_online_merges']}) "
           f"recon={stats['eamc_reconstructions']} "
           f"mean-dist={stats['eamc_mean_match_distance']:.3f}")
+    print(f"predictor: kind={stats['predictor']} source={predictor_source} "
+          f"seqs={stats.get('predictor_seqs_trained', 0)}")
     if args.eamc_path:
         saved = eamc.save(args.eamc_path)
         print(f"eamc: saved {stats['eamc_entries']} entries -> {saved}")
+    if args.predictor_path and args.predictor in ("learned", "hybrid"):
+        saved = srv.offload.predictor.save(args.predictor_path)
+        print(f"predictor: saved seqs="
+              f"{stats.get('predictor_seqs_trained', 0)} -> {saved}")
 
 
 if __name__ == "__main__":

@@ -118,6 +118,11 @@ class EngineConfig:
     eamc_online: bool = False
     eamc_drift_threshold: float = 0.6
     eamc_drift_min_seqs: int = 8
+    # prediction brain (DESIGN.md §10): "eamc" (the paper's trace matcher,
+    # bit-identical to pre-refactor behavior) | "learned" (online bigram/
+    # marginal model, keeps adapting under drift) | "hybrid" (trace-match
+    # while the match distance is good, learned model otherwise)
+    predictor: str = "eamc"
     # device-resident expert slot cache (model mode, DESIGN.md §6):
     # fraction of the L×E expert set held in fixed device weight slots.
     # 1.0 = everything resident (the fused single-jit step); < 1.0 streams
@@ -165,6 +170,7 @@ class StepEngine:
             eamc_online=cfg.eamc_online,
             eamc_drift_threshold=cfg.eamc_drift_threshold,
             eamc_drift_min_seqs=cfg.eamc_drift_min_seqs,
+            predictor=cfg.predictor,
         )
         self.offload = OffloadEngine(ocfg, eamc=eamc, prefetcher=prefetcher,
                                      cache_policy=cache_policy)
@@ -172,8 +178,6 @@ class StepEngine:
         self._costs = {i: layer_cost(arch, i, cfg.bytes_per_param)
                        for i in range(arch.n_layers)}
         self._running: List[Request] = []
-        self._expected_keys = None        # stall-admission prior (cached)
-        self._expected_keys_v = None      # (n_entries, eamc.version) key
         self.request_eams: Dict[int, np.ndarray] = {}
         self.token_latencies: List[float] = []
         self.iter_log: List[dict] = []
@@ -319,44 +323,16 @@ class StepEngine:
 
     # -- stall-aware admission (scheduler ``policy="stall"``) ------------------
     def _predicted_cold_cost(self, r: Request) -> int:
-        """Predicted cold-expert union a joining request adds: the EAMC
-        prior's expected expert set minus the experts currently GPU-resident.
-        At admission time the request has no observed EAM yet, so the
-        prediction is the collection-wide prior (per layer, the experts
-        covering 80% of aggregate activation mass across EAMC entries) —
-        the same database Algorithm 1 predicts from, one step earlier."""
-        keys = self._expected_expert_keys()
+        """Predicted cold-expert union a joining request adds: the
+        predictor's expected expert set (``cold_union`` — per layer, the
+        experts covering 80% of predicted activation mass) minus the
+        experts currently GPU-resident. At admission time the request has
+        no observed EAM yet, so the prediction is the brain-wide prior —
+        the same signal Algorithm 1 predicts from, one step earlier
+        (DESIGN.md §10)."""
+        keys = self.offload.predictor.cold_union()
         gpu = self.offload.gpu_cache
         return sum(1 for k in keys if k not in gpu)
-
-    def _expected_expert_keys(self):
-        eamc = self.offload.eamc
-        entries = eamc.entries
-        # keyed on the EAMC version too: online merges rewrite entries
-        # without changing their count, which the old length-only check
-        # would have treated as unchanged
-        ver = (len(entries), getattr(eamc, "version", 0))
-        if self._expected_keys is not None \
-                and self._expected_keys_v == ver:
-            return self._expected_keys
-        keys: List[tuple] = []
-        if entries:
-            agg = np.zeros_like(np.asarray(entries[0], np.float64))
-            for e in entries:
-                e = np.asarray(e, np.float64)
-                agg += e / max(e.sum(), 1.0)
-            for li in range(agg.shape[0]):
-                row = agg[li]
-                tot = row.sum()
-                if tot <= 0:
-                    continue
-                order = np.argsort(row)[::-1]
-                cum = np.cumsum(row[order]) / tot
-                take = int(np.searchsorted(cum, 0.8)) + 1
-                keys.extend((li, int(e)) for e in order[:take])
-        self._expected_keys = keys
-        self._expected_keys_v = ver
-        return keys
 
     # -- metrics ---------------------------------------------------------------
     def stats(self) -> dict:

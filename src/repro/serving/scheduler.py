@@ -98,7 +98,8 @@ class ContinuousScheduler:
     ``cold_cost_fn`` (``policy="stall"``): callable ``(request) -> int``
     returning the predicted number of cold experts — experts the joining
     request is expected to activate that are not GPU-resident right now —
-    supplied by the engine (EAMC prior vs. live cache contents). A prefill
+    supplied by the engine (the ``ExpertPredictor.cold_union()`` admission
+    prior vs. live cache contents — DESIGN.md §10). A prefill
     whose predicted cold union, weighted by the running-set size it would
     stall, exceeds ``stall_budget`` waits at the head of the queue:
     admitting it would force every running request to stall behind its

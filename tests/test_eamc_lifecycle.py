@@ -188,7 +188,8 @@ def test_empty_lookup_clears_match_ratios(rng):
 
 def test_empty_eamc_engine_has_no_predicted_ratios():
     """An engine serving with an empty (young) EAMC must not leak a
-    previous procedure's prediction into Alg-2 cache scores."""
+    previous procedure's prediction into Alg-2 cache scores (which now
+    read ``predictor.batch_probs()`` — DESIGN.md §10)."""
     cfg = OffloadConfig(n_moe_layers=L, n_experts=E, expert_bytes=10_000_000,
                         gpu_cache_experts=8, dram_cache_experts=16)
     eng = OffloadEngine(cfg, eamc=EAMC(capacity=4))
@@ -196,8 +197,9 @@ def test_empty_eamc_engine_has_no_predicted_ratios():
     counts = np.zeros(E)
     counts[2] = 3
     eng.on_layer(1, counts, 1e-4)
-    assert eng.ctx.predicted_ratios is None
-    assert eng.seq_ctxs[0].predicted_ratios is None
+    assert eng.predictor.batch_probs() is None
+    assert eng.predictor.expert_probs() is None
+    assert eng.prefetcher.last_match_ratios is None
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,356 @@
+"""The ExpertPredictor seam (DESIGN.md §10): pre-refactor golden
+bit-identity of the EAMC brain, the learned predictor's online training +
+persistence, hybrid arbitration, and the factory/config plumbing.
+
+The two golden digests below were captured at the pre-refactor HEAD
+(PR 8), where prefetch, cache scoring, stall admission, and placement
+each reached into the EAMC directly. ``predictor="eamc"`` must reproduce
+them bit for bit — token latencies, EAMC lifecycle counters, drift
+telemetry, and placement state."""
+import hashlib
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.eam import EAMC
+from repro.core.offload import OffloadConfig, OffloadEngine
+from repro.core.predictor import (EAMCPredictor, HybridPredictor,
+                                  LearnedPredictor, make_predictor)
+from repro.core.prefetch import SequenceContext
+from repro.serving import EngineConfig, SchedulerConfig, ServingEngine
+from repro.serving.engine import RoutingOracle
+from repro.serving.workload import (WorkloadConfig, attach_arrivals,
+                                    azure_like_arrivals, make_dataset)
+
+L, E = 4, 8
+
+
+# ---------------------------------------------------------------------------
+# Golden bit-identity: predictor="eamc" == the pre-refactor engine
+# ---------------------------------------------------------------------------
+
+def _oracle(n_tasks=6):
+    arch = get_config("switch-base-128")
+    nmoe = sum(arch.is_moe_layer(i) for i in range(arch.n_layers))
+    return RoutingOracle(n_layers=nmoe, n_experts=128, n_tasks=n_tasks,
+                         top_k=1, seed=7)
+
+
+def _engine(eamc, *, oracle, eamc_online=False, n_devices=1,
+            policy="prefill"):
+    arch = get_config("switch-base-128")
+    cfg = EngineConfig(arch=arch, gpu_cache_experts=120,
+                       dram_cache_experts=500, prefetch="moe-infinity",
+                       bytes_per_param=4, eamc_online=eamc_online,
+                       eamc_drift_threshold=0.6, eamc_drift_min_seqs=4,
+                       n_devices=n_devices,
+                       scheduler=SchedulerConfig(policy=policy))
+    return ServingEngine(cfg, eamc=eamc, oracle=oracle)
+
+
+def _run(eng, tasks, n=10, rps=3.0, seed=0, rid0=0):
+    reqs = make_dataset(WorkloadConfig(prompt_len=(16, 32),
+                                       output_len=(6, 12), n_tasks=6),
+                        n, seed=seed, tasks=list(tasks))
+    for j, r in enumerate(reqs):
+        r.rid = rid0 + j
+    arr = azure_like_arrivals(n, rps=rps, seed=seed + 5)
+    attach_arrivals(reqs, arr + eng.offload.sim.clock)
+    eng.run(reqs)
+
+
+def _sha(arr):
+    return hashlib.sha256(np.asarray(arr).tobytes()).hexdigest()[:16]
+
+
+def test_golden_online_drift_stall_bit_identical():
+    """Scenario A: online learning + a drifting task mix under stall-aware
+    admission — exercises predict/prefetch_priorities (Alg 1), victim_score
+    (Alg 2), cold_union (admission prior), drift telemetry, and the
+    insert/merge/reconstruct lifecycle in one replay."""
+    eng = _engine(EAMC(capacity=6), oracle=_oracle(), eamc_online=True,
+                  policy="stall")
+    _run(eng, [0, 1, 2], n=10, seed=0)
+    _run(eng, [3, 4, 5], n=10, seed=1, rid0=100)
+    lat = np.array(eng.token_latencies)
+    s = eng.stats()
+    assert _sha(lat) == "e56ec6fa2cc73ae2"
+    assert len(lat) == 118
+    assert repr(float(lat.sum())) == "1.225089565909389"
+    assert eng.offload.gpu_cache.hits == 1063
+    assert eng.offload.gpu_cache.misses == 945
+    assert eng.offload.sim.demand_fetches == 787
+    assert repr(float(eng.offload.sim.stall_time)) == "0.8117924659197413"
+    assert len(eng.offload.eamc.entries) == 6
+    assert s["eamc_online_inserts"] == 6
+    assert s["eamc_online_merges"] == 14
+    assert s["eamc_reconstructions"] == 0
+    assert repr(float(s["eamc_mean_match_distance"])) == "0.3500622677066277"
+
+
+def test_golden_offline_sharded_bit_identical():
+    """Scenario B: offline-constructed EAMC on a D=2 mesh — pins the
+    placement-heat path (predictor EWMA → set_load → LPT rebalance →
+    replication) byte for byte."""
+    o = _oracle()
+    eamc = EAMC(capacity=8)
+    rng = np.random.default_rng(1)
+    eams = []
+    for i in range(24):
+        eam = np.zeros((o.n_layers, o.n_experts))
+        for it in range(10):
+            eam += o.route_tokens(i % 3, 16 if it == 0 else 1, rng)
+        eams.append(eam)
+    eamc.construct(eams)
+    eng = _engine(eamc, oracle=o, n_devices=2)
+    _run(eng, [0, 1, 2], n=8, seed=2)
+    lat = np.array(eng.token_latencies)
+    s = eng.stats()
+    assert _sha(lat) == "f9ee86b389fddf20"
+    assert len(lat) == 34
+    assert repr(float(lat.sum())) == "0.3920438756862865"
+    assert eng.offload.gpu_cache.hits == 573
+    assert eng.offload.gpu_cache.misses == 344
+    assert eng.offload.sim.demand_fetches == 248
+    assert repr(float(eng.offload.sim.stall_time)) == "0.292710648092086"
+    assert len(eng.offload.eamc.entries) == 8
+    assert repr(float(s["eamc_mean_match_distance"])) == \
+        "0.14237677933246323"
+    p = eng.offload.placement
+    assert _sha(p.home) == "4240fcdcecfc5e2c"
+    assert _sha(p.load) == "7ff4aff40704de55"
+    assert _sha(p.replica_mask) == "d61fa6bc824407e7"
+    assert (p.n_rebalances, p.n_migrations, p.n_replicas) == (8, 758, 10)
+
+
+def test_placement_heat_matches_standalone_observe(rng):
+    """The predictor's shared heat EWMA (set_load path) is bit-identical
+    to ExpertPlacement.observe on the same EAM stream."""
+    from repro.core.placement import ExpertPlacement
+    ref = ExpertPlacement(L, E, 2)
+    pred = EAMCPredictor(EAMC(capacity=4), n_layers=L, n_experts=E)
+    via = ExpertPlacement(L, E, 2)
+    for _ in range(12):
+        eam = rng.random((L, E)) * rng.integers(0, 2, (L, E))
+        ref.observe(eam)
+        pred.finish_seq(eam)
+        via.set_load(pred.placement_heat())
+    assert np.array_equal(ref.load, via.load)
+    assert ref.seqs_observed == via.seqs_observed
+
+
+# ---------------------------------------------------------------------------
+# EAMCPredictor: cold_union admission prior
+# ---------------------------------------------------------------------------
+
+def _task_eam(rng, task, tokens=30.0):
+    m = np.zeros((L, E))
+    m[:, (task * 3) % E] = tokens
+    m[:, (task * 3 + 1) % E] = tokens / 2
+    return m + rng.poisson(0.2, (L, E))
+
+
+def test_cold_union_covers_hot_experts_and_caches(rng):
+    eamc = EAMC(capacity=4)
+    eamc.construct([_task_eam(rng, 0) for _ in range(6)])
+    pred = EAMCPredictor(eamc)
+    keys = pred.cold_union()
+    assert keys, "a populated collection must predict a cold working set"
+    # every layer's dominant expert is in the 80%-mass union
+    for li in range(L):
+        assert (li, 0) in keys
+    assert pred.cold_union() is keys            # cached on (len, version)
+    eamc.online_update(_task_eam(rng, 0, tokens=300.0))   # merge rewrites
+    assert pred.cold_union() is not keys        # version bump invalidates
+
+
+def test_cold_union_empty_collection():
+    assert EAMCPredictor(EAMC(capacity=4)).cold_union() == []
+
+
+# ---------------------------------------------------------------------------
+# LearnedPredictor: online training, prediction, persistence
+# ---------------------------------------------------------------------------
+
+def test_learned_predictor_cold_then_learns(rng):
+    lp = LearnedPredictor(L, E)
+    ctx = SequenceContext(L, E)
+    ctx.update(0, np.ones(E))
+    assert lp.predict(ctx) is None              # untrained: no prediction
+    assert lp.prefetch_priorities(ctx, 0) == []
+    for _ in range(10):
+        lp.finish_seq(_task_eam(rng, 1))
+    probs = lp.predict(ctx)
+    assert probs is not None and probs.shape == (L, E)
+    # observed layer 0 reports its true (uniform) ratios
+    assert np.allclose(probs[0], 1.0 / E)
+    # unobserved layers are dominated by task 1's experts (3 and 4)
+    for fl in range(1, L):
+        assert probs[fl].argmax() in (3, 4)
+    pri = lp.prefetch_priorities(ctx, 0)
+    assert pri and all(k[0] > 0 for k, _ in pri)
+    # sparsification: epsilon-probability experts are not emitted
+    assert all(probs[k[0], k[1]] >= lp.min_ratio for k, _ in pri)
+
+
+def test_learned_predictor_adapts_after_shift(rng):
+    """The drift story in miniature: the prior tracks the live mix."""
+    lp = LearnedPredictor(L, E)
+    for _ in range(20):
+        lp.finish_seq(_task_eam(rng, 0))
+    for _ in range(20):
+        lp.finish_seq(_task_eam(rng, 2))        # disjoint expert set
+    ctx = SequenceContext(L, E)
+    ctx.update(0, np.ones(E))
+    probs = lp.predict(ctx)
+    assert probs[2].argmax() == 6               # task 2's dominant expert
+    assert (2, 6) in lp.cold_union()
+
+
+def test_learned_save_load_roundtrip_bit_identical(tmp_path, rng):
+    lp = LearnedPredictor(L, E, decay=0.9, blend=0.6, min_ratio=0.02)
+    for t in (0, 1, 2, 0, 1):
+        lp.finish_seq(_task_eam(rng, t))
+    path = lp.save(tmp_path / "pred")
+    assert path.suffix == ".npz"
+    lp2 = LearnedPredictor.load(tmp_path / "pred")
+    assert lp2.n_trained == lp.n_trained
+    assert lp2.heat_seqs == lp.heat_seqs
+    assert (lp2.decay, lp2.blend, lp2.min_ratio) == (0.9, 0.6, 0.02)
+    assert np.array_equal(lp2.prior, lp.prior)          # exact, not approx
+    assert np.array_equal(lp2.trans, lp.trans)
+    assert np.array_equal(lp2._heat, lp._heat)
+    ctx = SequenceContext(L, E)
+    ctx.update(0, np.ones(E))
+    p1, p2 = lp.predict(ctx), lp2.predict(ctx)
+    assert np.array_equal(p1, p2)
+    assert lp.cold_union() == lp2.cold_union()
+
+
+def test_learned_load_state_in_place_and_shape_mismatch(tmp_path, rng):
+    lp = LearnedPredictor(L, E)
+    for _ in range(4):
+        lp.finish_seq(_task_eam(rng, 0))
+    lp.save(tmp_path / "pred")
+    fresh = LearnedPredictor(L, E)
+    fresh.load_state(tmp_path / "pred")
+    assert fresh.n_trained == 4
+    assert np.array_equal(fresh.prior, lp.prior)
+    with pytest.raises(ValueError, match="shape mismatch"):
+        LearnedPredictor(L + 1, E).load_state(tmp_path / "pred")
+
+
+def test_learned_resumes_training_after_load(tmp_path, rng):
+    """Warm restart then keep training == training straight through."""
+    seqs = [_task_eam(rng, t % 3) for t in range(8)]
+    lp = LearnedPredictor(L, E)
+    for m in seqs[:5]:
+        lp.finish_seq(m)
+    lp.save(tmp_path / "pred")
+    resumed = LearnedPredictor(L, E)
+    resumed.load_state(tmp_path / "pred")
+    straight = LearnedPredictor(L, E)
+    for m in seqs[:5]:
+        straight.finish_seq(m)
+    for m in seqs[5:]:
+        resumed.finish_seq(m)
+        straight.finish_seq(m)
+    assert resumed.n_trained == straight.n_trained == 8
+    assert np.array_equal(resumed.prior, straight.prior)
+    assert np.array_equal(resumed.trans, straight.trans)
+
+
+# ---------------------------------------------------------------------------
+# HybridPredictor arbitration
+# ---------------------------------------------------------------------------
+
+def test_hybrid_arbitrates_on_match_distance(rng):
+    eamc = EAMC(capacity=4)
+    eamc.construct([_task_eam(rng, 0) for _ in range(6)])
+    hp = HybridPredictor(EAMCPredictor(eamc), LearnedPredictor(L, E),
+                         switch_distance=0.35)
+    for _ in range(6):
+        hp.finish_seq(_task_eam(rng, 2))        # learned side trains
+    ctx = SequenceContext(L, E)
+    near = _task_eam(rng, 0)                    # in-distribution → EAMC
+    for li in range(L):                         # all layers observed: no
+        ctx.update(li, near[li])                # unobserved-layer offset
+    assert hp.eamc_pred.predict(ctx) is not None
+    assert hp.eamc_pred.last_distance <= 0.35
+    hp.predict(ctx)
+    assert hp.active == "eamc"
+    far = SequenceContext(L, E)
+    far.update(0, _task_eam(rng, 2)[0])         # far from the collection
+    assert hp.eamc_pred.predict(far) is not None
+    assert hp.eamc_pred.last_distance > 0.35    # the regime under test
+    hp.predict(far)
+    assert hp.active == "learned"
+    assert hp.n_learned_predictions >= 1
+
+
+def test_hybrid_falls_back_to_eamc_when_learned_cold(rng):
+    eamc = EAMC(capacity=4)
+    eamc.construct([_task_eam(rng, 0)])
+    hp = HybridPredictor(EAMCPredictor(eamc), LearnedPredictor(L, E),
+                         switch_distance=0.0)   # EAMC never "good enough"
+    ctx = SequenceContext(L, E)
+    ctx.update(0, _task_eam(rng, 1)[0])
+    p = hp.predict(ctx)                         # learned cold → EAMC result
+    assert p is not None and hp.active == "eamc"
+
+
+# ---------------------------------------------------------------------------
+# Factory + engine plumbing
+# ---------------------------------------------------------------------------
+
+def test_make_predictor_kinds():
+    eamc = EAMC(capacity=4)
+    assert make_predictor("eamc", eamc, n_layers=L, n_experts=E).name == \
+        "eamc"
+    assert make_predictor("learned", eamc, n_layers=L,
+                          n_experts=E).name == "learned"
+    assert make_predictor("hybrid", eamc, n_layers=L,
+                          n_experts=E).name == "hybrid"
+    with pytest.raises(ValueError, match="unknown predictor"):
+        make_predictor("oracle", eamc, n_layers=L, n_experts=E)
+
+
+@pytest.mark.parametrize("kind", ["learned", "hybrid"])
+def test_offload_engine_runs_with_alternative_predictor(kind, rng):
+    cfg = OffloadConfig(n_moe_layers=L, n_experts=E,
+                        expert_bytes=10_000_000, gpu_cache_experts=8,
+                        dram_cache_experts=16, predictor=kind)
+    eng = OffloadEngine(cfg, eamc=EAMC(capacity=4))
+    assert eng.predictor.name == kind
+    for rid in range(3):
+        eng.register_seq(rid)
+        for it in range(2):
+            for l in range(L):
+                counts = np.zeros(E)
+                counts[(rid * 3) % E] = 2
+                eng.on_layer(l, counts, 1e-4)
+        eng.finish_seq(rid)
+    s = eng.stats()
+    assert s["predictor"] == kind
+    assert s["predictor_seqs_trained"] == 3
+    # a trained learned brain now predicts for a new sequence
+    eng.register_seq(99)
+    counts = np.zeros(E)
+    counts[0] = 2
+    eng.on_layer(0, counts, 1e-4)
+    assert eng.predictor.expert_probs() is not None
+
+
+def test_serving_engine_learned_predictor_end_to_end():
+    arch = get_config("switch-base-128")
+    cfg = EngineConfig(arch=arch, gpu_cache_experts=120,
+                       dram_cache_experts=500, prefetch="moe-infinity",
+                       bytes_per_param=4, predictor="learned")
+    eng = ServingEngine(cfg, eamc=EAMC(capacity=4), oracle=_oracle())
+    _run(eng, [0, 1, 2], n=6)
+    s = eng.stats()
+    assert s["predictor"] == "learned"
+    assert s["predictor_seqs_trained"] == 6
+    assert s["gpu_hit_ratio"] > 0
+    assert all(len(t) > 0 for t in [eng.token_latencies])

@@ -124,6 +124,53 @@ def test_zero_recompiles_across_admission_waves(model_and_params):
     assert sorted(srv._free) == list(range(3))  # every slot recycled
 
 
+def test_zero_recompiles_with_learned_predictor_churn(model_and_params,
+                                                      tmp_path):
+    """Predictor state (the learned prior/transition/heat arrays) mutates
+    between and *during* drains — online ``finish_seq`` training plus a
+    mid-drain ``.npz`` save + warm reload — and none of it may reach a
+    traced shape: steady-state decode stays zero-recompile (the DESIGN.md
+    §10 host-sync note, armed at runtime)."""
+    arch, model, params = model_and_params
+    cfg = EngineConfig(arch=arch, gpu_cache_experts=4, dram_cache_experts=8,
+                       predictor="learned",
+                       scheduler=SchedulerConfig(max_batch=3))
+    srv = JaxModelServer(cfg, model, params, n_slots=3, cache_len=64)
+    pred = srv.offload.predictor
+    assert pred.name == "learned"
+    rng = np.random.default_rng(0)
+    L, E = pred.n_layers, pred.n_experts
+
+    # warmup wave: prefill buckets + the decode step trace once
+    for i, (p, o) in enumerate([(5, 4), (8, 6), (12, 5)]):
+        srv.submit(_req(arch, i, 0.0005 * i, plen=p, olen=o))
+    srv.drain()
+    for i in range(3):
+        srv.generated.pop(i)
+    warm = dict(srv.compile_counts)
+
+    with recompile_guard(srv, max_traces_per_key=1):
+        for w, base in enumerate((10, 20, 30)):
+            for i, (p, o) in enumerate([(6, 3), (11, 7), (7, 4)]):
+                srv.submit(_req(arch, base + i, 0.0005 * i, plen=p, olen=o))
+            steps = 0
+            while srv.step():
+                # flip predictor state mid-drain: an online training tick
+                # every iteration, and once per wave a full persistence
+                # round-trip swapping the model arrays under the engine
+                pred.finish_seq(rng.random((L, E)) * 40.0)
+                if steps == 2:
+                    pred.save(tmp_path / f"churn{w}")
+                    pred.load_state(tmp_path / f"churn{w}")
+                steps += 1
+            for i in range(3):
+                srv.generated.pop(base + i)
+
+    assert srv.compile_counts == warm          # zero recompiles after warmup
+    assert pred.n_trained > 9                  # the churn really trained
+    assert sorted(srv._free) == list(range(3))
+
+
 def test_generate_compat_wrapper(model_and_params):
     """The lockstep-compat ``generate`` API still returns (B, max_new)
     tokens + per-request EAMs over the slot pool."""
