@@ -1,0 +1,213 @@
+"""Multi-tenant serving benchmark (DESIGN.md §11).
+
+Two experiments over the trace-mode engine, both driven through the
+redesigned ``ServeSpec``/``TenantSpec`` surface:
+
+1. **Isolation** — a two-tenant drift replay: tenant ``stable`` serves the
+   same task mix throughout; tenant ``drift`` switches to a disjoint mix
+   mid-replay. ``per-tenant`` gives each tenant a private online EAMC (plus
+   a GPU-slot quota on the drifting tenant); ``shared`` declares the same
+   tenants without private brains, so both train one engine-wide collection
+   of the *same total capacity*. The claim: isolation lets the drifting
+   tenant re-learn faster (its entries never compete with the stable
+   tenant's, and its drift-triggered reconstruction only rebuilds its own
+   collection) while the stable tenant's hit ratio does not move.
+
+2. **SLA classes** — a three-tenant mixed workload (translation/chat/speech
+   — the nllb_moe_128-style batchy translation tenant marked
+   ``interactive``, chat ``standard``, speech ``batch``) replayed under
+   ``policy="stall"`` twice: once with the SLA tiers live, once with every
+   request flattened to ``standard`` (the pre-§11 tierless scheduler).
+   Tiering must cut the interactive class's p99 end-to-end latency without
+   starving batch (aging bounds its wait).
+"""
+from __future__ import annotations
+
+import argparse
+from dataclasses import replace
+
+import numpy as np
+
+from benchmarks.common import (build_engine, build_oracle, dump_json, emit,
+                               start_json_capture)
+from repro.configs import get_config
+from repro.serving.spec import PredictorSpec, ServeSpec, TenantSpec
+from repro.serving.workload import WorkloadConfig, make_multitenant_dataset
+
+ARCH = "switch-base-128"
+CAP = 4                      # the ONE PredictorSpec capacity both modes use
+STABLE_TASKS = (0, 1, 2)
+DRIFT_TASKS = ((3, 4), (5, 6, 7))    # pre-drift -> post-drift (disjoint)
+N_TASKS = 8
+
+
+def _isolation_spec(mode: str) -> ServeSpec:
+    """Both modes run the *same* online-EAMC PredictorSpec; ``per-tenant``
+    instantiates it once per tenant namespace, ``shared`` once engine-wide
+    (so eight task clusters contend for one capacity-CAP collection — the
+    deployment §11 replaces)."""
+    per = mode == "per-tenant"
+
+    def brain():
+        return (PredictorSpec(kind="eamc", online=True, capacity=CAP)
+                if per else None)
+    return ServeSpec(
+        arch=ARCH, system="moe-infinity", dram_slots=150, ssd_gbps=3.5,
+        predictor=PredictorSpec(kind="eamc", online=True, capacity=CAP),
+        tenants=(
+            # the quotas are the cache-interference half of the tentpole:
+            # each tenant's uploads (prefetch AND demand) may only recycle
+            # its own ~half of the GPU slots once it owns that many, so the
+            # drifting tenant's post-drift miss storm cannot erode its
+            # neighbour's residency (stable-shift stays within noise)
+            TenantSpec(tenant_id="stable", predictor=brain(),
+                       gpu_slot_quota=(76 if per else None),
+                       tasks=STABLE_TASKS, rps=1.0),
+            TenantSpec(tenant_id="drift", predictor=brain(),
+                       gpu_slot_quota=(76 if per else None),
+                       tasks=DRIFT_TASKS[0], rps=1.0),
+        ))
+
+
+def _run_isolation_replay(mode, *, n, seed, drift=True, emit_rows=True):
+    """Warmup + pre-drift + post-drift phases on one engine; per-tenant hit
+    ratios are phase-local deltas of the engine's interference counters.
+    ``drift=False`` runs the counterfactual replay where the drifting
+    tenant keeps its old mix (same seeds, same config) — the baseline the
+    stable-tenant check differences against, cancelling workload-seed
+    noise."""
+    rps = 1.0
+    wl = WorkloadConfig(n_tasks=N_TASKS, prompt_len=(24, 64),
+                        output_len=(8, 24))
+    # phase 0 warms caches + collections at the pre-drift mix and is not
+    # measured (otherwise cold-start noise swamps the stable-tenant check)
+    phase_drift_tasks = (DRIFT_TASKS[0], DRIFT_TASKS[0],
+                         DRIFT_TASKS[1] if drift else DRIFT_TASKS[0])
+    spec = _isolation_spec(mode)
+    eng = build_engine(spec, oracle=build_oracle(get_config(ARCH),
+                                                 n_tasks=N_TASKS))
+    label = mode if drift else f"{mode}-nodrift"
+    hit = {}
+    for pi, dtasks in enumerate(phase_drift_tasks):
+        tenants = tuple(replace(t, tasks=(t.tasks if t.tenant_id ==
+                                          "stable" else dtasks))
+                        for t in spec.tenants)
+        n_phase = 2 * n if pi == 0 else n    # long unmeasured warmup
+        reqs = make_multitenant_dataset(tenants, n_phase, cfg=wl,
+                                        seed=seed + 7 * pi, rps=rps)
+        clock = eng.offload.sim.clock
+        for j, r in enumerate(reqs):
+            r.rid = pi * 10000 + j
+            r.arrival += clock
+        before = {t.tenant_id: dict(eng.offload.tenant_access.get(
+            t.tenant_id, {})) for t in tenants}
+        eng.run(reqs)
+        if pi == 0:
+            continue
+        for t in tenants:
+            ta = eng.offload.tenant_access.get(t.tenant_id, {})
+            b = before[t.tenant_id]
+            dh = ta.get("hits", 0) - b.get("hits", 0)
+            dm = ta.get("misses", 0) - b.get("misses", 0)
+            hit[(t.tenant_id, pi)] = dh / max(1, dh + dm)
+            if emit_rows:
+                emit(f"multitenant/isolation/{label}/{t.tenant_id}"
+                     f"/phase{pi}/hit",
+                     round(hit[(t.tenant_id, pi)], 3), "ratio",
+                     f"hits={dh} misses={dm}")
+    if emit_rows:
+        for tid, ts in eng.stats().get("tenants", {}).items():
+            emit(f"multitenant/isolation/{label}/{tid}/demand-stall",
+                 round(ts["demand_stall_s"] * 1e3, 1), "ms",
+                 f"fetches={ts['demand_fetches']:.0f} "
+                 f"pred={ts['predictor_kind']} seqs={ts['predictor_seqs']}")
+    return hit
+
+
+def run_isolation(quick=True, seed=3):
+    n = 24 if quick else 48
+    per = _run_isolation_replay("per-tenant", n=n, seed=seed)
+    shared = _run_isolation_replay("shared", n=n, seed=seed)
+    # counterfactual: the same per-tenant replay with the neighbour NOT
+    # drifting — differencing against it isolates the drift's effect on
+    # the stable tenant from plain phase-to-phase workload-seed noise
+    counter = _run_isolation_replay("per-tenant", n=n, seed=seed,
+                                    drift=False)
+    # the §11 isolation metrics, asserted by CI (BENCH_10.json):
+    # 1. the drifting tenant re-learns faster behind its own collection
+    emit("multitenant/isolation/drifted-delta",
+         round(per[("drift", 2)] - shared[("drift", 2)], 3), "hit",
+         ">=0 = private brain beats the shared one post-drift")
+    # 2. the stable tenant does not feel its neighbour's drift
+    emit("multitenant/isolation/stable-shift",
+         round(per[("stable", 2)] - counter[("stable", 2)], 3), "hit",
+         "|x|<=0.01 = neighbour drift leaves the stable tenant unmoved")
+    return {"per-tenant": per, "shared": shared, "counterfactual": counter}
+
+
+SLA_TENANTS = (
+    TenantSpec(tenant_id="translation", sla_class="interactive",
+               tasks=(0, 1), rps=1.0),
+    TenantSpec(tenant_id="chat", sla_class="standard",
+               tasks=(2, 3), rps=1.0),
+    TenantSpec(tenant_id="speech", sla_class="batch",
+               tasks=(4, 5), rps=1.0),
+)
+
+
+def run_sla(quick=True, seed=5):
+    """Mixed translation/chat/speech replay under ``policy="stall"``:
+    tiered admission (SLA classes live) vs the same requests flattened to
+    one class. Per-class p99 end-to-end latency; grouping always uses the
+    tenant's declared class so the two runs are comparable."""
+    n = 36 if quick else 90
+    rps = 6.0
+    wl = WorkloadConfig(n_tasks=6, prompt_len=(24, 64), output_len=(8, 24))
+    p99 = {}
+    for mode in ("tiered", "tierless"):
+        oracle = build_oracle(get_config(ARCH), n_tasks=6)
+        eng = build_engine(ServeSpec(arch=ARCH, system="moe-infinity",
+                                     dram_slots=150, ssd_gbps=3.5,
+                                     max_batch=4, policy="stall",
+                                     tenants=SLA_TENANTS),
+                           oracle=oracle)
+        reqs = make_multitenant_dataset(SLA_TENANTS, n, cfg=wl, seed=seed,
+                                        rps=rps)
+        declared = {r.rid: r.sla_class for r in reqs}
+        if mode == "tierless":
+            for r in reqs:
+                r.sla_class = "standard"
+        eng.run(reqs)
+        for cls in ("interactive", "standard", "batch"):
+            lat = [r.latency for r in reqs if declared[r.rid] == cls]
+            p99[(mode, cls)] = float(np.percentile(lat, 99)) if lat else 0.0
+            emit(f"multitenant/sla/{mode}/{cls}/p99-e2e",
+                 round(p99[(mode, cls)] * 1e3, 1), "ms",
+                 f"n={len(lat)}")
+    emit("multitenant/sla/interactive-improvement",
+         round((p99[("tierless", "interactive")]
+                - p99[("tiered", "interactive")]) * 1e3, 1), "ms",
+         ">=0 = SLA tiers cut interactive p99 vs the tierless queue")
+    emit("multitenant/sla/batch-stretch",
+         round((p99[("tiered", "batch")]
+                - p99[("tierless", "batch")]) * 1e3, 1), "ms",
+         "bounded = aging keeps batch from starving")
+    return p99
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None,
+                    help="also dump rows as JSON ('-' = stdout)")
+    args = ap.parse_args(argv)
+    if args.json is not None:
+        start_json_capture()
+    run_isolation(quick=args.quick)
+    run_sla(quick=args.quick)
+    if args.json is not None:
+        dump_json(args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,7 @@ benches can no longer bitrot silently between PRs.
 from __future__ import annotations
 
 import json
+import warnings
 
 import numpy as np
 
@@ -18,6 +19,7 @@ from repro.core.eam import EAMC
 from repro.core.memsim import HWConfig
 from repro.serving import EngineConfig, SchedulerConfig, ServingEngine
 from repro.serving.engine import RoutingOracle
+from repro.serving.spec import PredictorSpec, ServeSpec
 from repro.serving.workload import (WorkloadConfig, attach_arrivals,
                                     azure_like_arrivals, make_dataset)
 
@@ -67,63 +69,115 @@ SYSTEMS = {
 }
 
 
-def build_engine(arch_id="switch-base-128", system="moe-infinity", *,
+_warned_legacy_kwargs = False
+
+
+def build_engine(spec="switch-base-128", system="moe-infinity", *,
                  gpu_slots=None, dram_slots=None, eamc=None, oracle=None,
                  hw=None, max_batch=16, seed=0, topk_all=True,
                  scheduling="continuous", policy="prefill",
                  keep_request_eams=False, ssd_gbps=None, ssd_iops=None,
                  tier_aware=True, eamc_mode="offline", eamc_path=None,
                  eamc_capacity=32, eamc_tasks=None, resident_fraction=None,
-                 transfer_dtype="fp32", n_devices=1, predictor="eamc"):
-    """``eamc_mode`` selects the EAMC lifecycle (DESIGN.md §4):
+                 transfer_dtype="fp32", n_devices=1, predictor="eamc",
+                 tenants=()):
+    """Build a trace-mode serving engine from a :class:`ServeSpec`
+    (``build_engine(spec)``) — the structured configuration surface of
+    DESIGN.md §11 — or from the legacy loose kwargs, kept as a thin
+    deprecated shim that constructs the equivalent spec (bit-identical:
+    the shim maps ``eamc_mode``/``eamc_path``/``predictor``/
+    ``eamc_capacity`` onto one :class:`PredictorSpec` and the builder
+    derives the mode straight back).
 
-    * ``"offline"`` — oracle-peek construction before serving (the seed-era
-      default; quietly optimistic, kept as the upper-bound baseline).
-    * ``"online"``  — cold start: the collection begins empty and learns
-      from the engine's own completed sequences (insert-or-merge + drift
-      reconstruction).
-    * ``"path"``    — warm restart from ``eamc_path`` (a ``.npz`` persisted
-      by a previous run); online learning stays on.
+    ``eamc_mode`` (legacy) / ``PredictorSpec`` (spec) select the EAMC
+    lifecycle (DESIGN.md §4):
 
-    An explicitly passed ``eamc`` wins over ``eamc_mode`` construction but
-    still honours the mode's online flag.
+    * ``"offline"`` (``online=False, path=None``) — oracle-peek
+      construction before serving (the seed-era default; quietly
+      optimistic, kept as the upper-bound baseline).
+    * ``"online"``  (``online=True, path=None``) — cold start: the
+      collection begins empty and learns from the engine's own completed
+      sequences (insert-or-merge + drift reconstruction).
+    * ``"path"``    (``path=...``) — warm restart from a ``.npz``
+      persisted by a previous run; online learning stays on.
+
+    Runtime objects stay builder arguments: an explicitly passed ``eamc``
+    wins over mode-driven construction but still honours the online flag;
+    ``oracle``/``hw`` override the defaults.
     """
-    arch = get_config(arch_id)
+    if isinstance(spec, ServeSpec):
+        return _build_engine_from_spec(spec, eamc=eamc, oracle=oracle,
+                                       hw=hw)
+    global _warned_legacy_kwargs
+    if not _warned_legacy_kwargs:
+        _warned_legacy_kwargs = True
+        warnings.warn(
+            "build_engine(arch_id, system, **kwargs) is deprecated; pass a "
+            "ServeSpec: build_engine(ServeSpec(arch=..., ...))",
+            DeprecationWarning, stacklevel=2)
+    built = ServeSpec(
+        arch=spec, system=system,
+        gpu_slots=gpu_slots, dram_slots=dram_slots,
+        resident_fraction=resident_fraction,
+        max_batch=max_batch, scheduling=scheduling, policy=policy,
+        predictor=PredictorSpec(kind=predictor,
+                                path=(eamc_path if eamc_mode == "path"
+                                      else None),
+                                capacity=eamc_capacity,
+                                online=eamc_mode in ("online", "path")),
+        tenants=tuple(tenants),
+        eamc_tasks=(tuple(eamc_tasks) if eamc_tasks is not None else None),
+        ssd_gbps=ssd_gbps, ssd_iops=ssd_iops, tier_aware=tier_aware,
+        transfer_dtype=transfer_dtype, n_devices=n_devices,
+        topk_all=topk_all, keep_request_eams=keep_request_eams, seed=seed)
+    if eamc_mode not in ("offline", "online", "path"):
+        raise ValueError(f"unknown eamc_mode {eamc_mode!r}")
+    return _build_engine_from_spec(built, eamc=eamc, oracle=oracle, hw=hw)
+
+
+def _build_engine_from_spec(s: ServeSpec, *, eamc=None, oracle=None,
+                            hw=None):
+    arch = get_config(s.arch)
     oracle = oracle or build_oracle(arch)
+    ps = s.predictor
+    # the spec encodes the legacy eamc_mode as (online, path) — derive it
+    # back so both entry paths run literally the same construction
+    eamc_mode = "path" if ps.path else ("online" if ps.online else "offline")
     if eamc is None:
         if eamc_mode == "offline":
-            eamc = build_eamc(arch, oracle, capacity=eamc_capacity,
-                              tasks=eamc_tasks)
+            eamc = build_eamc(arch, oracle, capacity=ps.capacity,
+                              tasks=(list(s.eamc_tasks)
+                                     if s.eamc_tasks is not None else None))
         elif eamc_mode == "online":
-            eamc = EAMC(capacity=eamc_capacity)
-        elif eamc_mode == "path":
-            eamc = EAMC.load(eamc_path)
+            eamc = EAMC(capacity=ps.capacity)
         else:
-            raise ValueError(f"unknown eamc_mode {eamc_mode!r}")
+            eamc = EAMC.load(ps.path)
     E, L = arch.moe.n_experts, n_moe_layers(arch)
     total = E * L
-    if resident_fraction is not None:
+    gpu_slots, dram_slots = s.gpu_slots, s.dram_slots
+    if s.resident_fraction is not None:
         # trace-mode mirror of the model-mode slot cache: the GPU cache
         # capacity is the device expert-slot count, rf × L·E (floor: one
         # layer's worst-case routed set, like JaxModelServer)
-        gpu_slots = min(total, max(int(round(resident_fraction * total)),
+        gpu_slots = min(total, max(int(round(s.resident_fraction * total)),
                                    min(total, E)))
     gpu_slots = gpu_slots if gpu_slots is not None else total // 5
     dram_slots = dram_slots if dram_slots is not None else (2 * total) // 3
     hw = hw or HWConfig()
-    if ssd_gbps is not None or ssd_iops is not None:
+    if s.ssd_gbps is not None or s.ssd_iops is not None:
         from dataclasses import replace
         hw = replace(hw,
-                     ssd_to_dram_gbps=(hw.ssd_to_dram_gbps if ssd_gbps
-                                       is None else ssd_gbps),
-                     ssd_iops=hw.ssd_iops if ssd_iops is None else ssd_iops)
-    cache_policy, prefetch = SYSTEMS[system]
+                     ssd_to_dram_gbps=(hw.ssd_to_dram_gbps if s.ssd_gbps
+                                       is None else s.ssd_gbps),
+                     ssd_iops=(hw.ssd_iops if s.ssd_iops is None
+                               else s.ssd_iops))
+    cache_policy, prefetch = SYSTEMS[s.system]
     # CUDA-UM baseline: page-fault handling per on-demand migration —
     # ~25 us per 2 MiB fault batch (driver fault storm; the paper observes
     # <10% GPU utilization for PYTORCH-UM under load, §8.2)
     from repro.serving.perf_model import expert_bytes as _ebytes
     demand_overhead = 0.0
-    if system == "pytorch-um":
+    if s.system == "pytorch-um":
         demand_overhead = 25e-6 * (_ebytes(arch, 4) / 2e6)
     # long replays: finished requests' (L, E) EAMs are not retained unless a
     # caller needs them (drift analysis / invariance tests opt back in)
@@ -132,21 +186,22 @@ def build_engine(arch_id="switch-base-128", system="moe-infinity", *,
                        cache_policy=cache_policy,
                        prefetch=prefetch, bytes_per_param=4,
                        hw=hw,
-                       scheduler=SchedulerConfig(max_batch=max_batch,
-                                                 policy=policy),
-                       scheduling=scheduling,
-                       keep_request_eams=keep_request_eams,
+                       scheduler=SchedulerConfig(max_batch=s.max_batch,
+                                                 policy=s.policy),
+                       scheduling=s.scheduling,
+                       keep_request_eams=s.keep_request_eams,
                        demand_overhead_s=demand_overhead,
-                       tier_aware=tier_aware,
-                       transfer_dtype=transfer_dtype,
-                       n_devices=n_devices,
-                       predictor=predictor,
+                       tier_aware=s.tier_aware,
+                       transfer_dtype=s.transfer_dtype,
+                       n_devices=s.n_devices,
+                       predictor=ps.kind,
+                       tenants=tuple(s.tenants),
                        eamc_online=eamc_mode in ("online", "path"))
     prefetcher = None
     if prefetch == "topk":
         from repro.core.prefetch import TopKPrefetcher
-        prefetcher = TopKPrefetcher(k=E if topk_all else 8)
-    return ServingEngine(cfg, eamc=eamc, oracle=oracle, seed=seed,
+        prefetcher = TopKPrefetcher(k=E if s.topk_all else 8)
+    return ServingEngine(cfg, eamc=eamc, oracle=oracle, seed=s.seed,
                          prefetcher=prefetcher)
 
 

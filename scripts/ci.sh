@@ -9,9 +9,10 @@
 #                            # requests, Poisson arrivals, expert slot
 #                            # cache) under a timeout
 #   BENCH=1 scripts/ci.sh    # additionally run reduced bench_rps,
-#                            # bench_latency_cdf, and bench_beyond
-#                            # (predictor head-to-head) points and assert
-#                            # they emit valid JSON (bitrot guard)
+#                            # bench_latency_cdf, bench_beyond (predictor
+#                            # head-to-head), and bench_multitenant
+#                            # (tenancy isolation + SLA tiers) points and
+#                            # assert they emit valid JSON (bitrot guard)
 #
 # CI_LOG_DIR=<dir>           # tee serve/bench reports there (uploaded as
 #                            # workflow artifacts)
@@ -219,6 +220,58 @@ assert n2 >= v1 and v2 > v1, \
     f"warm restart lost learned state: loaded {n2}, saved {v1}->{v2}"
 print(f"ci.sh: learned predictor OK (seqs {v1}->{v2}, warm source={s2})")
 PY
+
+    # multi-tenant serving (DESIGN.md §11): two tenants with private
+    # predictor namespaces — each persists its own .npz and warm-restarts
+    # from it; tokens are bit-identical across the restart and the decode
+    # path stays zero-recompile
+    echo "ci.sh: SMOKE tier — two-tenant serve: private predictor lifecycle"
+    scratch MT_TMP
+    cat > "$MT_TMP/tenants.json" <<JSON
+[
+  {"tenant_id": "acme", "sla_class": "interactive",
+   "predictor": {"kind": "eamc", "online": true, "path": "$MT_TMP/acme"},
+   "gpu_slot_quota": 3, "rps": 2.0},
+  {"tenant_id": "globex", "sla_class": "batch", "stall_budget": 2,
+   "predictor": {"kind": "eamc", "online": true, "path": "$MT_TMP/globex"},
+   "rps": 1.0}
+]
+JSON
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout "${SMOKE_TIMEOUT:-300}" \
+        python -m repro.launch.serve --reduced --requests 6 \
+        --tenants "$MT_TMP/tenants.json" | tee "$MT_TMP/run1.log" \
+        | log_tee serve_multitenant_cold.log
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout "${SMOKE_TIMEOUT:-300}" \
+        python -m repro.launch.serve --reduced --requests 6 \
+        --tenants "$MT_TMP/tenants.json" | tee "$MT_TMP/run2.log" \
+        | log_tee serve_multitenant_warm.log
+    python - "$MT_TMP/run1.log" "$MT_TMP/run2.log" <<'PY'
+import os, re, sys
+
+def parse(p):
+    s = open(p).read()
+    assert "guard: zero-recompile ok" in s, \
+        f"{p}: recompile_guard line missing under multi-tenant serving"
+    src = dict(re.findall(r"tenant (\w+): sla=.* src=(\w+)", s))
+    saved = dict(re.findall(r"tenant (\w+): saved predictor -> (\S+)", s))
+    assert set(src) == set(saved) == {"acme", "globex"}, \
+        f"{p}: tenant report lines missing: src={src} saved={saved}"
+    return re.findall(r"toks=([\d,]+)", s), src, saved
+
+t1, src1, saved1 = parse(sys.argv[1])
+t2, src2, saved2 = parse(sys.argv[2])
+assert t1 and t1 == t2, \
+    f"tenant warm restart changed token output: {t1} vs {t2}"
+assert all(v == "cold" for v in src1.values()), f"run1 sources: {src1}"
+assert all(v == "load" for v in src2.values()), \
+    f"warm restart did not reload the private predictors: {src2}"
+paths = set(saved2.values())
+assert len(paths) == 2, f"tenants shared one predictor file: {paths}"
+for p in paths:
+    assert os.path.exists(p), f"persisted tenant predictor missing: {p}"
+print(f"ci.sh: multi-tenant lifecycle OK (cold->load for {sorted(src2)}, "
+      "distinct .npz per tenant, tokens bit-identical, zero recompiles)")
+PY
 fi
 
 if [ -n "${BENCH:-}" ]; then
@@ -246,9 +299,16 @@ if [ -n "${BENCH:-}" ]; then
         --json "$BENCH_TMP/beyond.json" | log_tee bench_predictor.log
     # the PR-9 trajectory point: the predictor head-to-head, archived by name
     [ -n "$LOG_DIR" ] && cp "$BENCH_TMP/beyond.json" "$LOG_DIR/BENCH_9.json"
+    echo "ci.sh: BENCH tier — multi-tenant isolation + SLA admission tiers"
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout "${BENCH_TIMEOUT:-600}" \
+        python -m benchmarks.bench_multitenant --quick \
+        --json "$BENCH_TMP/multitenant.json" | log_tee bench_multitenant.log
+    # the PR-10 trajectory point: tenancy isolation + SLA, archived by name
+    [ -n "$LOG_DIR" ] && cp "$BENCH_TMP/multitenant.json" \
+        "$LOG_DIR/BENCH_10.json"
     python - "$BENCH_TMP/rps.json" "$BENCH_TMP/cdf.json" \
         "$BENCH_TMP/wire.json" "$BENCH_TMP/devices.json" \
-        "$BENCH_TMP/beyond.json" <<'PY'
+        "$BENCH_TMP/beyond.json" "$BENCH_TMP/multitenant.json" <<'PY'
 import json, sys
 
 for p in sys.argv[1:]:
@@ -301,6 +361,27 @@ assert learned > frozen, \
     f"learned predictor did not beat the frozen EAMC: {learned} <= {frozen}"
 print(f"ci.sh: predictor head-to-head OK (post-drift hit: "
       f"learned={learned} > frozen={frozen})")
+
+# multi-tenant (DESIGN.md §11): (1) private brains — the drifting tenant's
+# post-drift hit must be at least the shared-collection run's; (2) the
+# stable tenant must not feel its neighbour's drift (counterfactual-
+# differenced, so workload-seed noise cancels); (3) SLA tiers must not
+# worsen interactive p99 vs the tierless shared queue
+with open(sys.argv[6]) as f:
+    rows = {r["name"]: r["value"] for r in json.load(f)["rows"]}
+per = rows["multitenant/isolation/per-tenant/drift/phase2/hit"]
+shared = rows["multitenant/isolation/shared/drift/phase2/hit"]
+assert per >= shared, \
+    f"per-tenant brain lost to the shared one post-drift: {per} < {shared}"
+shift = rows["multitenant/isolation/stable-shift"]
+assert abs(shift) <= 0.01, \
+    f"neighbour drift moved the stable tenant's hit ratio by {shift}"
+p99_t = rows["multitenant/sla/tiered/interactive/p99-e2e"]
+p99_0 = rows["multitenant/sla/tierless/interactive/p99-e2e"]
+assert p99_t <= p99_0, \
+    f"SLA tiers worsened interactive p99: {p99_t}ms > {p99_0}ms"
+print(f"ci.sh: multi-tenant OK (drift hit {per} >= {shared}, "
+      f"stable shift {shift:+.3f}, interactive p99 {p99_t} <= {p99_0}ms)")
 PY
 fi
 

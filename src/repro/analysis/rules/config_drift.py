@@ -6,7 +6,8 @@ is read but cannot be set from ``build_engine``/``serve.py`` argparse is
 half-plumbed: the paper's ablation for that knob cannot be reproduced from
 the CLI. Both drifts accumulate invisibly as PRs add knobs.
 
-For every ``@dataclass`` whose name ends in ``Config`` this rule checks:
+For every ``@dataclass`` whose name ends in ``Config`` or ``Spec`` this
+rule checks:
 
 * **unread** — the field name is never read as an attribute
   (``something.field``) anywhere in the scanned tree (the declaration
@@ -38,7 +39,7 @@ from repro.analysis.source import ModuleSource
 
 
 def _is_dataclass_config(node: ast.ClassDef) -> bool:
-    if not node.name.endswith("Config"):
+    if not (node.name.endswith("Config") or node.name.endswith("Spec")):
         return False
     for dec in node.decorator_list:
         target = dec.func if isinstance(dec, ast.Call) else dec
@@ -61,8 +62,13 @@ def _norm(opt: str) -> str:
     return opt.lstrip("-").replace("-", "_")
 
 
-# configs that must be fully CLI-settable (paper knobs swept by the CLI)
-PLUMBED_CLASSES = frozenset({"EngineConfig", "OffloadConfig", "HWConfig"})
+# configs that must be fully CLI-settable (paper knobs swept by the CLI).
+# The *Spec dataclasses are the redesigned serving surface (DESIGN.md §11):
+# every field must be reachable from serve.py argparse or a constructor in
+# launch/build_engine code (their field-by-field ``from_dict`` classmethods
+# satisfy the forwarded-kwarg clause, keeping JSON specs CLI-equivalent).
+PLUMBED_CLASSES = frozenset({"EngineConfig", "OffloadConfig", "HWConfig",
+                             "ServeSpec", "TenantSpec", "PredictorSpec"})
 
 
 @rule("config-drift",

@@ -269,9 +269,37 @@ class ExpertCache:
         self._set = set()
         self.hits = 0
         self.misses = 0
+        # tenant slot accounting (DESIGN.md §11): which tenant's traffic
+        # pulled a key in. Drives per-tenant occupancy stats and the
+        # optional GPU-slot quota; empty for untenanted engines.
+        self.owner: Dict[Key, str] = {}
+        self._owned: Dict[str, int] = {}
 
     def __contains__(self, key: Key) -> bool:
         return key in self._set
+
+    # -- tenant slot ownership ------------------------------------------------
+    def set_owner(self, key: Key, tenant: str) -> None:
+        if key not in self._set:
+            return
+        prev = self.owner.get(key)
+        if prev == tenant:
+            return
+        if prev is not None:
+            self._owned[prev] = self._owned.get(prev, 1) - 1
+        self.owner[key] = tenant
+        self._owned[tenant] = self._owned.get(tenant, 0) + 1
+
+    def owned_count(self, tenant: str) -> int:
+        return self._owned.get(tenant, 0)
+
+    def owned_keys(self, tenant: str) -> List[Key]:
+        return [k for k in self.resident if self.owner.get(k) == tenant]
+
+    def _drop_owner(self, key: Key) -> None:
+        prev = self.owner.pop(key, None)
+        if prev is not None:
+            self._owned[prev] = self._owned.get(prev, 1) - 1
 
     def access(self, key: Key, now: float = 0.0) -> bool:
         if key in self._set:
@@ -300,6 +328,7 @@ class ExpertCache:
         """Evict a specific resident key (caller already chose the victim)."""
         self.resident.remove(key)
         self._set.discard(key)
+        self._drop_owner(key)
         self.policy.on_evict(key)
 
     @property

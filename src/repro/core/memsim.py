@@ -167,6 +167,26 @@ class MemSim:
         # stagings the prefetcher completed
         self.demand_from: Dict[str, int] = {DRAM: 0, SSD: 0}
         self.staged_prefetches = 0
+        # per-tenant demand attribution (DESIGN.md §11): a demand fetch
+        # triggered by several tenants' tokens in one iteration splits
+        # evenly across them — the interference-accounting signal behind
+        # the per-tenant stall/bytes columns in stats(). Empty (and the
+        # demand_fetch fast path untouched) for untenanted engines.
+        self.tenant_demand: Dict[str, Dict[str, float]] = {}
+
+    def _note_tenant_demand(self, tenants, stall: float) -> None:
+        if not tenants:
+            return
+        share = 1.0 / len(tenants)
+        for t in tenants:
+            d = self.tenant_demand.setdefault(
+                t, {"demand_fetches": 0.0, "stall_s": 0.0, "bytes": 0.0})
+            d["demand_fetches"] += share
+            d["stall_s"] += stall * share
+            d["bytes"] += self.expert_bytes * share
+
+    def tenant_stats(self) -> Dict[str, Dict[str, float]]:
+        return {t: dict(v) for t, v in self.tenant_demand.items()}
 
     # -- transfer mechanics ----------------------------------------------------
     @property
@@ -334,8 +354,10 @@ class MemSim:
                                  now=self.clock)
             self._gpu_pending_priority[key] = priority
 
-    def demand_fetch(self, key: Key) -> float:
-        """Expert needed NOW (Alg. 1 steps 9-12). Returns stall seconds."""
+    def demand_fetch(self, key: Key, tenants=None) -> float:
+        """Expert needed NOW (Alg. 1 steps 9-12). Returns stall seconds.
+        ``tenants``: tenant ids whose tokens activated the expert this
+        iteration — the fetch's cost is attributed evenly across them."""
         self._run_links(self.clock)
         if key in self.on_gpu:
             self.prefetch_hits += 1
@@ -356,7 +378,9 @@ class MemSim:
         if infl:
             done = infl[2]
             self._finish_until(done)
-            return max(0.0, done - t0)
+            stall = max(0.0, done - t0)
+            self._note_tenant_demand(tenants, stall)
+            return stall
         # jump the queue with MAX_PRIORITY
         if key in self.in_dram:
             self._gpu_for(key).submit(key, MAX_PRIORITY, self.expert_bytes,
@@ -391,6 +415,7 @@ class MemSim:
                 raise RuntimeError(f"demand fetch of {key} never completed")
         stall = self.clock - t0
         self.stall_time += stall
+        self._note_tenant_demand(tenants, stall)
         return stall
 
     def _preempt_ssd_prefetch(self, key: Key) -> None:

@@ -76,6 +76,13 @@ class OffloadConfig:
     # "learned" the online bigram/marginal model, "hybrid" trace-matches
     # while the match distance is good and falls back to the learned model
     predictor: str = "eamc"              # | learned | hybrid
+    # multi-tenant namespaces (DESIGN.md §11): a tuple of TenantSpec-shaped
+    # objects (duck-typed — this module must not import the serving spec
+    # layer). A tenant with its own PredictorSpec gets a private prediction
+    # brain + prefetcher whose drift/reconstruction lifecycle never touches
+    # any other tenant's; gpu_slot_quota bounds its GPU cache footprint.
+    # () = untenanted, every new code path dormant (bit-identical engine).
+    tenants: tuple = ()
 
 
 class OffloadEngine:
@@ -169,6 +176,24 @@ class OffloadEngine:
         self.prefetcher.tier_weight = (self.sim.tier_weight
                                        if cfg.tier_aware else None)
         self._protected: frozenset = frozenset()
+
+        # -- tenant namespaces (DESIGN.md §11) ----------------------------
+        self.tenant_predictors: Dict[str, ExpertPredictor] = {}
+        self.tenant_prefetchers: Dict[str, Prefetcher] = {}
+        self.tenant_fallback: Dict[str, bool] = {}
+        self.tenant_quota: Dict[str, int] = {}
+        self.tenant_paths: Dict[str, str] = {}
+        self.tenant_predictor_source: Dict[str, str] = {}
+        self.seq_tenant: Dict[Hashable, str] = {}
+        self.tenant_access: Dict[str, Dict[str, int]] = {}
+        # in-flight prefetch attribution: key -> the ONE tenant whose plan
+        # proposed it (quota enforcement on arrival); multi-tenant and
+        # untenanted proposals stay unattributed
+        self._prefetch_tenant: Dict[Key, str] = {}
+        self._tenant_ids: List[str] = []
+        for t in cfg.tenants:
+            self._register_tenant(t)
+
         self.warm_start()
 
         # stats
@@ -188,6 +213,112 @@ class OffloadEngine:
         for k in rest[: self.cfg.dram_cache_experts]:
             self.dram_cache.insert(k)
             self.sim.in_dram.add(k)
+
+    # -- tenant namespaces (DESIGN.md §11) -----------------------------------
+    def _register_tenant(self, t) -> None:
+        """``t`` is TenantSpec-shaped (duck-typed): ``tenant_id``,
+        ``predictor`` (PredictorSpec-shaped or None = share the engine
+        brain), ``gpu_slot_quota``, ``shared_fallback``."""
+        tid = str(t.tenant_id)
+        self._tenant_ids.append(tid)
+        quota = getattr(t, "gpu_slot_quota", None)
+        if quota:
+            self.tenant_quota[tid] = int(quota)
+        ps = getattr(t, "predictor", None)
+        if ps is None:
+            return                      # shared-namespace tenant
+        cfg = self.cfg
+        t_eamc = EAMC(capacity=int(getattr(ps, "capacity", 32) or 32))
+        kind = getattr(ps, "kind", None) or cfg.predictor
+        pred = make_predictor(
+            kind, t_eamc,
+            n_layers=cfg.n_moe_layers, n_experts=cfg.n_experts,
+            online=bool(getattr(ps, "online", False)) or cfg.eamc_online,
+            drift_threshold=cfg.eamc_drift_threshold,
+            drift_min_seqs=cfg.eamc_drift_min_seqs)
+        pred.track_drift = isinstance(self.prefetcher,
+                                      ActivationAwarePrefetcher)
+        source = "cold"
+        path = getattr(ps, "path", None)
+        if path:
+            self.tenant_paths[tid] = str(path)
+            from pathlib import Path
+            p = Path(path)
+            if p.suffix != ".npz":
+                p = p.with_suffix(p.suffix + ".npz")
+            if p.exists():
+                pred.load_state(str(p))
+                source = "load"
+        if isinstance(self.prefetcher, ActivationAwarePrefetcher):
+            pf: Prefetcher = ActivationAwarePrefetcher(pred)
+        else:
+            pf = Prefetcher()
+        pf.tier_weight = self.prefetcher.tier_weight
+        self.tenant_predictors[tid] = pred
+        self.tenant_prefetchers[tid] = pf
+        self.tenant_fallback[tid] = bool(getattr(t, "shared_fallback", True))
+        self.tenant_predictor_source[tid] = source
+
+    def predictor_for(self, tenant: Optional[str]) -> ExpertPredictor:
+        """The brain serving this tenant's predictions right now: its own,
+        unless it has none — or it is cold and shared_fallback is on."""
+        pred = self.tenant_predictors.get(tenant or "")
+        if pred is None:
+            return self.predictor
+        if self.tenant_fallback.get(tenant, True) and pred.is_cold:
+            return self.predictor
+        return pred
+
+    def prefetcher_for(self, tenant: Optional[str]) -> Prefetcher:
+        pf = self.tenant_prefetchers.get(tenant or "")
+        if pf is None:
+            return self.prefetcher
+        pred = self.tenant_predictors[tenant]
+        if self.tenant_fallback.get(tenant, True) and pred.is_cold:
+            return self.prefetcher
+        return pf
+
+    def save_tenant_state(self) -> Dict[str, str]:
+        """Persist every path-configured tenant brain; returns
+        tenant_id -> written path."""
+        out: Dict[str, str] = {}
+        for tid, path in self.tenant_paths.items():
+            pred = self.tenant_predictors.get(tid)
+            save = getattr(pred, "save", None)
+            if save is None:
+                continue
+            out[tid] = str(save(path))
+        return out
+
+    def _enforce_quota(self, tenant: str, key: Key) -> None:
+        """About to demand-fetch ``key`` for ``tenant`` at its GPU-slot
+        quota: evict one of the tenant's *own* residents first so the
+        arrival reuses its slot instead of displacing another tenant's."""
+        q = self.tenant_quota.get(tenant)
+        if q is None or self.gpu_cache.owned_count(tenant) < q:
+            return
+        owned = [k for k in self.gpu_cache.owned_keys(tenant)
+                 if k not in self._protected]
+        if not owned:
+            return
+        victim = self.gpu_cache.policy.victim(owned, self._protected)
+        if victim is None:
+            victim = owned[0]
+        self.gpu_cache.remove(victim)
+        self.sim.evict(victim, GPU)
+        self._demote(victim, self.sim.clock)
+
+    def _account_owner(self, key: Key, tenants) -> None:
+        """Slot-ownership accounting after an access resolved: only
+        single-tenant activations claim slots, and never past quota."""
+        if len(tenants) != 1 or key not in self.gpu_cache:
+            return
+        tenant = next(iter(tenants))
+        q = self.tenant_quota.get(tenant)
+        if (q is not None and self.gpu_cache.owner.get(key) != tenant
+                and self.gpu_cache.owned_count(tenant) >= q):
+            return
+        self.gpu_cache.set_owner(key, tenant)
 
     # -- zero-capacity DRAM tier (GPU↔SSD ablation) ---------------------------
     # With ``dram_cache_experts=0`` the DRAM level still exists in the
@@ -238,10 +369,19 @@ class OffloadEngine:
                 # the DRAM image was only the pipeline staging buffer —
                 # release it on GPU arrival
                 self._release_staging(key)
+            # quota enforcement covers prefetch arrivals too: an at-quota
+            # tenant's upload recycles one of its own slots instead of
+            # displacing a neighbour's resident (interference containment,
+            # DESIGN.md §11)
+            tenant = self._prefetch_tenant.pop(key, None)
+            if tenant is not None and self.tenant_quota.get(tenant):
+                self._enforce_quota(tenant, key)
             evicted = self.gpu_cache.insert(key, now, self._protected)
             if evicted is not None:
                 self.sim.evict(evicted, GPU)
                 self._demote(evicted, now)
+            if tenant is not None:
+                self._account_owner(key, (tenant,))
         else:
             if self._dram_is_staging_only():
                 # keep the staging image only while a GPU leg is still
@@ -297,8 +437,13 @@ class OffloadEngine:
     # holds the batch-combined EAM used by Algorithm 2's cache scoring ("the
     # ongoing generative inference") and is maintained incrementally as
     # sequences join and leave.
-    def register_seq(self, rid: Hashable) -> SequenceContext:
-        """A request joins the running set; its per-sequence EAM starts."""
+    def register_seq(self, rid: Hashable,
+                     tenant: Optional[str] = None) -> SequenceContext:
+        """A request joins the running set; its per-sequence EAM starts.
+        ``tenant`` routes the sequence's predictions and training to that
+        tenant's namespace (None/"" = the shared namespace)."""
+        if tenant:
+            self.seq_tenant[rid] = str(tenant)
         if rid in self.seq_ctxs:
             return self.seq_ctxs[rid]
         if not self.seq_ctxs:
@@ -309,6 +454,11 @@ class OffloadEngine:
                 self.prefetcher.start_sequence()
             else:
                 self.predictor.start_sequence()
+            for tid, pf in self.tenant_prefetchers.items():
+                if isinstance(pf, ActivationAwarePrefetcher):
+                    pf.start_sequence()
+                else:
+                    self.tenant_predictors[tid].start_sequence()
         ctx = SequenceContext(self.cfg.n_moe_layers, self.cfg.n_experts)
         self.seq_ctxs[rid] = ctx
         return ctx
@@ -319,6 +469,7 @@ class OffloadEngine:
         the batch-combined EAM so it stops influencing Alg. 2 cache scores
         and prefetch merging. Returns the sequence's final EAM."""
         ctx = self.seq_ctxs.pop(rid, None)
+        tenant = self.seq_tenant.pop(rid, "")
         if ctx is None:
             return None
         eam = ctx.cur_eam.copy()
@@ -333,7 +484,17 @@ class OffloadEngine:
         # for every brain it also folds the EAM into the shared placement
         # heat EWMA. Runs at the sequence boundary — nothing here touches
         # the per-layer hot path.
-        self.predictor.finish_seq(eam)
+        t_pred = self.tenant_predictors.get(tenant)
+        if t_pred is not None:
+            # strict namespace isolation: a tenant-owned sequence trains
+            # ONLY its own brain — its drift can never merge into, insert
+            # into, or reconstruct the shared (or any other tenant's)
+            # collection. The shared placement-heat stream still sees every
+            # sequence so expert-parallel rebalancing keeps full load info.
+            t_pred.finish_seq(eam)
+            self.predictor._update_heat(eam)
+        else:
+            self.predictor.finish_seq(eam)
         if self.placement is not None:
             # placement learns from the same finish_seq stream as the
             # predictor: adopt its fresh heat EWMA as the load estimate,
@@ -348,6 +509,8 @@ class OffloadEngine:
             # predictor's per-procedure state (batch-merged prediction)
             self.ctx.reset()
             self.predictor.start_sequence()
+            for p in self.tenant_predictors.values():
+                p.start_sequence()
             self.sim.clear_queues()
         return eam
 
@@ -371,8 +534,13 @@ class OffloadEngine:
         combined = token_counts.sum(axis=0)
         self.ctx.update(layer_idx, combined)                # steps 6-7
 
-        # step 8: per-sequence predictions, merged by max priority
+        # step 8: per-sequence predictions, merged by max priority. Each
+        # tenant-owned sequence plans through its tenant's prefetcher/brain
+        # (shared-fallback while cold); the untenanted engine takes the
+        # identical pre-tenant path.
+        tenanted = bool(self._tenant_ids)
         merged: Dict[Key, float] = {}
+        plan_tenants: Dict[Key, set] = {}
         pred_merged = None
         for b, rid in enumerate(rids):
             c = self.seq_ctxs.get(rid)
@@ -381,16 +549,29 @@ class OffloadEngine:
             if token_counts[b].sum() == 0 and c.cur_eam.sum() == 0:
                 continue  # no activity yet
             c.update(layer_idx, token_counts[b])
-            for key, pr in self.prefetcher.plan(c, layer_idx):
+            tid = self.seq_tenant.get(rid) if tenanted else None
+            pf = (self.prefetcher_for(tid) if tenanted else self.prefetcher)
+            for key, pr in pf.plan(c, layer_idx):
                 if self.cfg.prefetch_lookahead and \
                         key[0] > layer_idx + self.cfg.prefetch_lookahead:
                     continue
                 if pr > merged.get(key, -1.0):
                     merged[key] = pr
-            ratios = getattr(self.prefetcher, "last_match_ratios", None)
+                if self.tenant_quota:
+                    plan_tenants.setdefault(key, set()).add(tid or "")
+            ratios = getattr(pf, "last_match_ratios", None)
             if ratios is not None:
                 pred_merged = (ratios if pred_merged is None
                                else np.maximum(pred_merged, ratios))
+        if self.tenant_quota:
+            # refresh in-flight attribution: a key is tenant-owned only
+            # while exactly one tenant's plan wants it
+            for key in merged:
+                ts = plan_tenants.get(key) or ()
+                if len(ts) == 1 and "" not in ts:
+                    self._prefetch_tenant[key] = next(iter(ts))
+                else:
+                    self._prefetch_tenant.pop(key, None)
         # §6.2 alignment: one predictor lifecycle tick per MoE layer — the
         # batch-merged prediction feeds Alg-2 cache scoring (victim_score /
         # batch_probs) and the combined routing is the online training
@@ -405,17 +586,45 @@ class OffloadEngine:
         activated = [(layer_idx, int(e)) for e in np.nonzero(combined)[0]]
         self.access_log.extend(activated)
         self._protected = frozenset(activated)
+        # interference accounting: which tenants' tokens activated each
+        # expert this iteration (drives per-tenant hit/miss counters,
+        # demand-stall attribution, and slot ownership)
+        key_tenants: Dict[Key, set] = {}
+        if tenanted:
+            for b, rid in enumerate(rids):
+                tid = self.seq_tenant.get(rid)
+                if not tid:
+                    continue
+                for e in np.nonzero(token_counts[b])[0]:
+                    key_tenants.setdefault((layer_idx, int(e)),
+                                           set()).add(tid)
         stall = 0.0
         missing = []
         for key in activated:
-            if self.gpu_cache.access(key, self.sim.clock):
+            hit = self.gpu_cache.access(key, self.sim.clock)
+            if tenanted:
+                for tid in key_tenants.get(key, ()):
+                    ta = self.tenant_access.setdefault(
+                        tid, {"hits": 0, "misses": 0})
+                    ta["hits" if hit else "misses"] += 1
+            if hit:
                 if key not in self.sim.on_gpu:
                     self.sim.on_gpu.add(key)
+                if tenanted:
+                    self._account_owner(key, key_tenants.get(key, ()))
             else:
                 missing.append(key)
                 self.sim.submit_prefetch(key, 1e30)
         for key in missing:
-            stall += self.sim.demand_fetch(key)
+            if tenanted:
+                tset = key_tenants.get(key, ())
+                if len(tset) == 1:
+                    self._enforce_quota(next(iter(tset)), key)
+                stall += self.sim.demand_fetch(
+                    key, tenants=tuple(sorted(tset)) or None)
+                self._account_owner(key, tset)
+            else:
+                stall += self.sim.demand_fetch(key)
             self._dram_access(key)
         self._protected = frozenset()
 
@@ -437,7 +646,33 @@ class OffloadEngine:
         # (and prediction-free prefetchers, which never feed the EWMA)
         # report nan exactly like the pre-refactor non-aware path
         mean_dist = float(self.predictor.mean_match_distance)
+        tenants = {}
+        if self._tenant_ids:
+            sim_t = sim.tenant_stats()
+            for tid in self._tenant_ids:
+                ta = self.tenant_access.get(tid, {})
+                h, m = ta.get("hits", 0), ta.get("misses", 0)
+                sd = sim_t.get(tid, {})
+                pred = self.tenant_predictors.get(tid)
+                tenants[tid] = {
+                    "gpu_hits": h,
+                    "gpu_misses": m,
+                    "gpu_hit_ratio": h / (h + m) if h + m else 0.0,
+                    "demand_fetches": sd.get("demand_fetches", 0.0),
+                    "demand_stall_s": sd.get("stall_s", 0.0),
+                    "demand_bytes": sd.get("bytes", 0.0),
+                    "gpu_slots_owned": self.gpu_cache.owned_count(tid),
+                    "gpu_slot_quota": self.tenant_quota.get(tid),
+                    "predictor_kind": (pred.name if pred is not None
+                                       else "shared"),
+                    "predictor_source": self.tenant_predictor_source.get(
+                        tid, "shared"),
+                    "predictor_seqs": (pred.stats().get(
+                        "predictor_seqs_trained", 0)
+                        if pred is not None else 0),
+                }
         return {
+            **({"tenants": tenants} if tenants else {}),
             "predictor": self.predictor.name,
             **self.predictor.stats(),
             "eamc_entries": len(self.eamc.entries),

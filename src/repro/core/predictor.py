@@ -164,6 +164,13 @@ class ExpertPredictor:
         expert-parallel placement load signal."""
         return self._heat
 
+    @property
+    def is_cold(self) -> bool:
+        """True while the brain has learned nothing — a cold per-tenant
+        predictor may borrow the shared brain's predictions
+        (TenantSpec.shared_fallback) until its own has training signal."""
+        return False
+
     def stats(self) -> dict:
         return {}
 
@@ -342,8 +349,28 @@ class EAMCPredictor(ExpertPredictor):
         self._cold_keys_v = ver
         return keys
 
+    @property
+    def is_cold(self) -> bool:
+        return not self.eamc.entries
+
     def stats(self) -> dict:
         return {"predictor_seqs_trained": len(self.eamc.entries)}
+
+    # -- persistence (per-tenant namespaces persist their own EAMC) ----------
+    def save(self, path) -> Path:
+        return Path(str(self.eamc.save(path)))
+
+    def load_state(self, path) -> None:
+        """In-place warm restart: replace the collection's entries with the
+        persisted ones (the cache/prefetcher already hold references to
+        ``self.eamc``, so the object identity must survive the load)."""
+        other = EAMC.load(path)
+        eamc = self.eamc
+        eamc.entries = other.entries
+        eamc.capacity = max(eamc.capacity, other.capacity)
+        eamc.version += 1
+        self._cold_keys = None
+        self.reset_drift_signal()
 
 
 class LearnedPredictor(ExpertPredictor):
@@ -499,6 +526,10 @@ class LearnedPredictor(ExpertPredictor):
         self._cold_keys_v = self.version
         return keys
 
+    @property
+    def is_cold(self) -> bool:
+        return self.n_trained == 0
+
     def stats(self) -> dict:
         return {"predictor_seqs_trained": self.n_trained}
 
@@ -634,6 +665,10 @@ class HybridPredictor(ExpertPredictor):
     def cold_union(self) -> List[Key]:
         keys = self.eamc_pred.cold_union()
         return keys if keys else self.learned.cold_union()
+
+    @property
+    def is_cold(self) -> bool:
+        return self.eamc_pred.is_cold and self.learned.is_cold
 
     def placement_heat(self) -> Optional[np.ndarray]:
         return self.eamc_pred.placement_heat()

@@ -16,6 +16,14 @@ dataset pass (the default), cold-start empty with online learning
 collection (``--eamc-path``; the file is rewritten at exit, so back-to-back
 invocations keep learning across restarts).
 
+Multi-tenant serving (DESIGN.md §11): ``--tenants spec.json`` loads a
+TenantSpec list (or a full ServeSpec document) — each tenant may carry a
+private predictor namespace with its own ``.npz`` persistence, an SLA
+class consumed by the stall-policy admission tiers, a per-tenant stall
+budget, and a GPU-slot quota. Requests are assigned to tenants by a
+seeded draw weighted by each tenant's ``rps``; the report gains one line
+per tenant and private predictor state is rewritten at exit.
+
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-moe-235b-a22b \
         --reduced --requests 8 --eamc-online --eamc-path /tmp/eamc
 """
@@ -34,7 +42,8 @@ from repro.core.memsim import PAPER_8GPU
 from repro.core.predictor import LearnedPredictor
 from repro.core.tracer import build_eamc
 from repro.models import Model
-from repro.serving import EngineConfig, SchedulerConfig
+from repro.serving import EngineConfig, SchedulerConfig, TenantSpec
+from repro.serving.spec import SLA_CLASSES, load_tenants
 from repro.serving.engine import JaxModelServer
 from repro.serving.guard import recompile_guard
 from repro.serving.request import Request
@@ -134,8 +143,35 @@ def main(argv=None):
                          "and upload link each, all-to-all MoE dispatch, "
                          "and EAMC-guided placement. On a CPU host, forced "
                          "host devices are configured automatically")
+    ap.add_argument("--tenants", default=None,
+                    help="multi-tenant spec JSON (a TenantSpec list or a "
+                         "full ServeSpec document, DESIGN.md §11): "
+                         "per-tenant predictor namespaces with their own "
+                         ".npz persistence, SLA classes, stall budgets, "
+                         "and GPU-slot quotas")
+    ap.add_argument("--sla-class", default=None, choices=list(SLA_CLASSES),
+                    help="override: tag every request (and every tenant "
+                         "from --tenants) with this SLA class; the stall "
+                         "policy admits interactive < standard < batch, "
+                         "with aging so batch never starves")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    # TenantSpec is rebuilt field-by-field here so every spec knob is
+    # constructor-plumbed from launch code (config-drift R5) and the
+    # --sla-class override applies uniformly
+    tenants = ()
+    if args.tenants:
+        tenants = tuple(
+            TenantSpec(tenant_id=t.tenant_id,
+                       sla_class=args.sla_class or t.sla_class,
+                       predictor=t.predictor,
+                       stall_budget=t.stall_budget,
+                       gpu_slot_quota=t.gpu_slot_quota,
+                       shared_fallback=t.shared_fallback,
+                       tasks=t.tasks,
+                       rps=t.rps)
+            for t in load_tenants(args.tenants))
 
     if args.devices > 1:
         # must happen before the first jax device use: force enough host
@@ -202,7 +238,8 @@ def main(argv=None):
                      transfer_dtype=args.transfer_dtype,
                      fenced_uploads=args.fenced_uploads,
                      n_devices=args.devices,
-                     predictor=args.predictor),
+                     predictor=args.predictor,
+                     tenants=tenants),
         model, params, eamc=eamc,
         cache_len=args.prompt_len + args.max_new)
 
@@ -222,6 +259,15 @@ def main(argv=None):
     # arrival timestamp; the engine's virtual clock drives admission
     rng = np.random.default_rng(args.seed)
     arrivals = poisson_arrivals(args.requests, rps=args.rps, seed=args.seed)
+    # tenant assignment draws from a separate stream so prompts/budgets are
+    # identical with and without --tenants (isolates the tenancy effect)
+    trng = np.random.default_rng(args.seed + 1)
+    weights = None
+    if tenants:
+        weights = np.array([max(float(t.rps), 0.0) for t in tenants])
+        if weights.sum() <= 0:
+            weights = np.ones(len(tenants))
+        weights = weights / weights.sum()
     reqs = []
     for i in range(args.requests):
         plen = int(rng.integers(max(4, args.prompt_len // 2),
@@ -229,9 +275,16 @@ def main(argv=None):
         budget = int(rng.integers(max(2, args.max_new // 2),
                                   args.max_new + 1))
         prompt = np.asarray(dataset[i % len(dataset)][:plen], np.int32)
-        reqs.append(Request(rid=i, arrival=float(arrivals[i]), prompt=prompt,
-                            max_new_tokens=budget))
-        srv.submit(reqs[-1])
+        r = Request(rid=i, arrival=float(arrivals[i]), prompt=prompt,
+                    max_new_tokens=budget)
+        if tenants:
+            t = tenants[int(trng.choice(len(tenants), p=weights))]
+            r.tenant_id = t.tenant_id
+            r.sla_class = t.sla_class
+        elif args.sla_class:
+            r.sla_class = args.sla_class
+        reqs.append(r)
+        srv.submit(r)
     # every jit entry (decode step, each prefill bucket, slot splices) may
     # trace exactly once across the whole run; a steady-state retrace
     # raises RecompileError instead of silently stalling the pipeline
@@ -298,6 +351,29 @@ def main(argv=None):
           f"mean-dist={stats['eamc_mean_match_distance']:.3f}")
     print(f"predictor: kind={stats['predictor']} source={predictor_source} "
           f"seqs={stats.get('predictor_seqs_trained', 0)}")
+    if tenants:
+        tstats = stats.get("tenants", {})
+        by_tenant = {}
+        for r in reqs:
+            by_tenant.setdefault(r.tenant_id, []).append(r)
+        defs = getattr(srv._sched, "deferrals_by_tenant", {})
+        for t in tenants:
+            ts = tstats.get(t.tenant_id, {})
+            rs = by_tenant.get(t.tenant_id, [])
+            p99 = (float(np.percentile([r.latency for r in rs], 99))
+                   if rs else 0.0)
+            print(f"tenant {t.tenant_id}: sla={t.sla_class} n={len(rs)} "
+                  f"hit={ts.get('gpu_hit_ratio', 0.0):.3f} "
+                  f"p99={p99*1e3:.1f}ms "
+                  f"deferrals={defs.get(t.tenant_id, 0)} "
+                  f"slots={ts.get('gpu_slots_owned', 0)}"
+                  f"{'/' + str(t.gpu_slot_quota) if t.gpu_slot_quota else ''} "
+                  f"stall={ts.get('demand_stall_s', 0.0)*1e3:.1f}ms "
+                  f"pred={ts.get('predictor_kind', 'shared')} "
+                  f"src={ts.get('predictor_source', '-')} "
+                  f"seqs={ts.get('predictor_seqs', 0)}")
+        for tid, saved in srv.offload.save_tenant_state().items():
+            print(f"tenant {tid}: saved predictor -> {saved}")
     if args.eamc_path:
         saved = eamc.save(args.eamc_path)
         print(f"eamc: saved {stats['eamc_entries']} entries -> {saved}")

@@ -5,5 +5,8 @@ from repro.serving.guard import (  # noqa: F401
 from repro.serving.scheduler import (  # noqa: F401
     ContinuousScheduler, Scheduler, SchedulerConfig, StaticBatchScheduler,
     make_scheduler)
+from repro.serving.spec import (  # noqa: F401
+    PredictorSpec, ServeSpec, TenantSpec, load_tenants)
 from repro.serving.workload import (  # noqa: F401
-    WorkloadConfig, make_dataset, poisson_arrivals, azure_like_arrivals)
+    TENANT_TASK_MIXES, WorkloadConfig, make_dataset,
+    make_multitenant_dataset, poisson_arrivals, azure_like_arrivals)

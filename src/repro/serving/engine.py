@@ -133,6 +133,10 @@ class EngineConfig:
     # they are the same physical resource.
     resident_fraction: float = 1.0
     n_weight_slots: Optional[int] = None
+    # multi-tenant serving (DESIGN.md §11): TenantSpec tuple forwarded to
+    # the offload engine (per-tenant predictor namespaces, GPU-slot quotas)
+    # and consulted here for per-tenant stall budgets. () = untenanted.
+    tenants: tuple = ()
 
 
 class StepEngine:
@@ -171,6 +175,7 @@ class StepEngine:
             eamc_drift_threshold=cfg.eamc_drift_threshold,
             eamc_drift_min_seqs=cfg.eamc_drift_min_seqs,
             predictor=cfg.predictor,
+            tenants=cfg.tenants,
         )
         self.offload = OffloadEngine(ocfg, eamc=eamc, prefetcher=prefetcher,
                                      cache_policy=cache_policy)
@@ -212,7 +217,8 @@ class StepEngine:
         for r in scheduler.admit(sim.clock):
             r.t_sched = sim.clock
             r.state = PREFILL
-            self.offload.register_seq(r.rid)
+            self.offload.register_seq(
+                r.rid, tenant=getattr(r, "tenant_id", "") or None)
             self.tracer.start(r.rid)
             self._running.append(r)
         if not self._running:
@@ -302,6 +308,15 @@ class StepEngine:
         scfg = self.cfg.scheduler
         return scfg.stall_budget or max(1, self.cfg.gpu_cache_experts // 5)
 
+    def _tenant_stall_budgets(self) -> Optional[Dict[str, int]]:
+        """Per-tenant admission-budget overrides (TenantSpec.stall_budget);
+        None when no tenant sets one — the scheduler then runs the exact
+        single-budget legacy path."""
+        out = {str(t.tenant_id): int(t.stall_budget)
+               for t in self.cfg.tenants
+               if getattr(t, "stall_budget", None)}
+        return out or None
+
     def run(self, requests: List[Request], *,
             max_iters: Optional[int] = None,
             scheduling: Optional[str] = None) -> List[Request]:
@@ -311,7 +326,8 @@ class StepEngine:
         sched = make_scheduler(scheduling or self.cfg.scheduling,
                                self._scheduler_cfg(), requests,
                                cold_cost_fn=self._predicted_cold_cost,
-                               stall_budget=self._stall_budget())
+                               stall_budget=self._stall_budget(),
+                               stall_budgets=self._tenant_stall_budgets())
         if max_iters is None:
             # every iteration with live requests generates one token per
             # running request, so the workload bounds its own iteration
@@ -329,8 +345,10 @@ class StepEngine:
         experts currently GPU-resident. At admission time the request has
         no observed EAM yet, so the prediction is the brain-wide prior —
         the same signal Algorithm 1 predicts from, one step earlier
-        (DESIGN.md §10)."""
-        keys = self.offload.predictor.cold_union()
+        (DESIGN.md §10). Tenant-owned requests consult their tenant's
+        brain (falling through to the shared one while cold/absent)."""
+        keys = self.offload.predictor_for(
+            getattr(r, "tenant_id", "") or None).cold_union()
         gpu = self.offload.gpu_cache
         return sum(1 for k in keys if k not in gpu)
 
@@ -475,7 +493,8 @@ class JaxModelServer(StepEngine):
         self._sched = ContinuousScheduler(
             self._scheduler_cfg(),
             cold_cost_fn=self._predicted_cold_cost,
-            stall_budget=self._stall_budget())
+            stall_budget=self._stall_budget(),
+            stall_budgets=self._tenant_stall_budgets())
         # device-resident expert slot cache: real weight streaming through
         # the layered runtime (DESIGN.md §6); None = all-resident fused step
         self.slot_runtime = None

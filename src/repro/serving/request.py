@@ -27,6 +27,8 @@ class Request:
     prompt: np.ndarray             # (S,) int32 token ids
     max_new_tokens: int
     task_id: int = 0               # which synthetic dataset/task produced it
+    tenant_id: str = ""            # "" = untenanted (shared namespace)
+    sla_class: str = "standard"    # interactive | standard | batch
     # filled by the engine
     state: str = WAITING
     t_sched: float = 0.0           # when the request was admitted to the batch

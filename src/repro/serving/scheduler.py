@@ -22,11 +22,18 @@ from __future__ import annotations
 
 from bisect import insort
 from dataclasses import dataclass
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 from repro.serving.request import Batch, Request
 
 _EPS = 1e-12
+
+# SLA admission lattice (DESIGN.md §11): lower rank admits first. Aging
+# promotes a waiting request one rank per ``sla_aging_s`` seconds queued,
+# so ``batch`` traffic is delayed by bursts of ``interactive`` work but
+# never starved: after 2 x sla_aging_s in the queue a batch request
+# outranks a freshly arrived interactive one.
+SLA_RANK = {"interactive": 0, "standard": 1, "batch": 2}
 
 
 @dataclass
@@ -49,6 +56,8 @@ class SchedulerConfig:
     #                             gpu_cache_experts // 5)
     stall_max_wait: float = 0.75  # "stall" aging: admit anyway after this
     #                               long in the queue (starvation bound)
+    sla_aging_s: float = 1.5    # SLA lattice: queue seconds per rank
+    #                             promotion (batch -> standard -> interactive)
 
 
 class Scheduler:
@@ -103,11 +112,24 @@ class ContinuousScheduler:
     whose predicted cold union, weighted by the running-set size it would
     stall, exceeds ``stall_budget`` waits at the head of the queue:
     admitting it would force every running request to stall behind its
-    expert transfers. Admission order stays FIFO; an empty running set or
-    ``stall_max_wait`` aging always unblocks the head."""
+    expert transfers. Admission order is FIFO within an SLA class, with
+    classes ordered by the :data:`SLA_RANK` lattice plus queue-age
+    promotions; with a single class this reduces to pure FIFO. An empty
+    running set or ``stall_max_wait`` aging always unblocks a request.
+
+    Deferral aging is **per-rid**, not per-queue-position: ``_age_base``
+    pins each rid's aging clock at first submission, so a deferred request
+    that is re-queued (or reordered behind another tenant's traffic) keeps
+    its original bound — ``stall_max_wait`` measures total time since the
+    request first entered the scheduler, whatever its queue position did
+    in between.
+
+    ``stall_budgets`` maps ``tenant_id -> stall budget``, overriding the
+    global budget for that tenant's joins (TenantSpec.stall_budget)."""
 
     def __init__(self, cfg: SchedulerConfig, requests: List[Request] = (), *,
-                 cold_cost_fn=None, stall_budget: Optional[int] = None):
+                 cold_cost_fn=None, stall_budget: Optional[int] = None,
+                 stall_budgets: Optional[Dict[str, int]] = None):
         self.cfg = cfg
         self.waiting: List[Request] = sorted(requests,
                                              key=lambda r: r.arrival)
@@ -115,10 +137,21 @@ class ContinuousScheduler:
         self.cold_cost_fn = cold_cost_fn
         self.stall_budget = (cfg.stall_budget if stall_budget is None
                              else stall_budget)
+        self.stall_budgets: Dict[str, int] = dict(stall_budgets or {})
         self.deferrals = 0          # stall policy: admission decisions vetoed
+        self.deferrals_by_class: Dict[str, int] = {}
+        self.deferrals_by_tenant: Dict[str, int] = {}
+        # per-rid aging base: pinned at first sight of the rid, surviving
+        # re-queues (the aging bound is a property of the request, not of
+        # its current queue position)
+        self._age_base: Dict[int, float] = {}
+        for r in self.waiting:
+            self._age_base.setdefault(r.rid, r.arrival)
 
     def add(self, request: Request) -> None:
-        """Dynamic arrival (online serving front-ends)."""
+        """Dynamic arrival (online serving front-ends). Re-adding a rid
+        (re-queue) keeps its original aging base."""
+        self._age_base.setdefault(request.rid, request.arrival)
         insort(self.waiting, request, key=lambda r: r.arrival)
 
     def done(self) -> bool:
@@ -135,11 +168,25 @@ class ContinuousScheduler:
     def _defer(self, head: Request, now: float) -> bool:
         if self.cfg.policy != "stall" or self.cold_cost_fn is None:
             return False
-        if now - head.arrival >= self.cfg.stall_max_wait - _EPS:
+        base = self._age_base.get(head.rid, head.arrival)
+        if now - base >= self.cfg.stall_max_wait - _EPS:
             return False                     # aging: bounded deferral
+        budget = self.stall_budgets.get(
+            getattr(head, "tenant_id", "") or "", self.stall_budget)
         # the joiner's cold-expert transfers stall every running request's
         # iterations, so the marginal cost scales with the running-set size
-        return self.cold_cost_fn(head) * self.n_running > self.stall_budget
+        return self.cold_cost_fn(head) * self.n_running > budget
+
+    def _admit_key(self, r: Request, now: float):
+        """SLA lattice order: (class rank - age promotions, aging base,
+        rid). Within one class this is FIFO — older requests have at least
+        as many promotions AND an earlier base — so a single-class
+        workload admits in exactly the legacy arrival order."""
+        rank = SLA_RANK.get(getattr(r, "sla_class", "standard"), 1)
+        base = self._age_base.get(r.rid, r.arrival)
+        aging = self.cfg.sla_aging_s
+        promo = int((now - base) / aging) if aging > 0 else 0
+        return (rank - promo, base, r.rid)
 
     def admit(self, now: float) -> List[Request]:
         free = self.cfg.max_batch - self.n_running
@@ -155,13 +202,46 @@ class ContinuousScheduler:
         # weighted by how many running requests the joiner's transfers
         # would stall.
         gate = self.n_running > 0
+        n_arrived = 0
+        while (n_arrived < len(self.waiting)
+               and self.waiting[n_arrived].arrival <= now + _EPS):
+            n_arrived += 1
+        if n_arrived == 0:
+            return []
+        arrived = self.waiting[:n_arrived]
+        order = sorted(range(n_arrived),
+                       key=lambda i: self._admit_key(arrived[i], now))
         admitted: List[Request] = []
-        while (self.waiting and len(admitted) < free
-               and self.waiting[0].arrival <= now + _EPS):
-            if gate and self._defer(self.waiting[0], now):
-                self.deferrals += 1
+        taken = set()
+        # a deferred candidate blocks its whole SLA class (FIFO within a
+        # class is preserved: nothing behind it in-class may jump it), but
+        # lower-priority classes are still tried — admission stays
+        # work-conserving across classes
+        blocked_classes = set()
+        for i in order:
+            if len(admitted) >= free:
                 break
-            admitted.append(self.waiting.pop(0))
+            r = arrived[i]
+            cls = getattr(r, "sla_class", "standard")
+            if cls in blocked_classes:
+                continue
+            if gate and self._defer(r, now):
+                self.deferrals += 1
+                self.deferrals_by_class[cls] = (
+                    self.deferrals_by_class.get(cls, 0) + 1)
+                tid = getattr(r, "tenant_id", "")
+                if tid:
+                    self.deferrals_by_tenant[tid] = (
+                        self.deferrals_by_tenant.get(tid, 0) + 1)
+                blocked_classes.add(cls)
+                continue
+            admitted.append(r)
+            taken.add(i)
+        if taken:
+            self.waiting = [r for j, r in enumerate(self.waiting)
+                            if j not in taken]
+            for r in admitted:
+                self._age_base.pop(r.rid, None)
         self.n_running += len(admitted)
         return admitted
 
@@ -210,10 +290,12 @@ class StaticBatchScheduler:
 
 def make_scheduler(scheduling: str, cfg: SchedulerConfig,
                    requests: List[Request], *, cold_cost_fn=None,
-                   stall_budget: Optional[int] = None):
+                   stall_budget: Optional[int] = None,
+                   stall_budgets: Optional[Dict[str, int]] = None):
     if scheduling == "continuous":
         return ContinuousScheduler(cfg, requests, cold_cost_fn=cold_cost_fn,
-                                   stall_budget=stall_budget)
+                                   stall_budget=stall_budget,
+                                   stall_budgets=stall_budgets)
     if scheduling == "static":
         return StaticBatchScheduler(cfg, requests)
     raise ValueError(f"unknown scheduling mode: {scheduling!r}")

@@ -82,3 +82,77 @@ def attach_arrivals(reqs: List[Request], arrivals: np.ndarray) -> List[Request]:
     for r, t in zip(reqs, arrivals):
         r.arrival = float(t)
     return reqs
+
+
+# ---------------------------------------------------------------------------
+# Mixed multi-tenant workloads (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+# canonical tenant task mixes for the mixed-workload replay: a translation
+# tenant (nllb_moe_128-style long-input batchy traffic), an interactive chat
+# tenant, and a speech tenant. Task ids index the RoutingOracle's
+# task-conditioned routing distributions, so each tenant activates its own
+# expert cluster — the structure per-tenant EAMCs isolate.
+TENANT_TASK_MIXES = {
+    "translation": (0, 1),
+    "chat": (2, 3),
+    "speech": (4, 5),
+}
+
+
+def make_multitenant_dataset(tenants, n: int, *,
+                             cfg: WorkloadConfig | None = None,
+                             seed: int = 0, rps: float = 2.0,
+                             tenant_tasks=None) -> List[Request]:
+    """One interleaved Poisson replay over several tenants' workloads.
+
+    ``tenants``: TenantSpec-shaped objects (``tenant_id``, ``sla_class``,
+    ``tasks``, ``rps``). Each tenant gets its own request stream — tasks
+    drawn round-robin from its task mix (``tenant_tasks[tenant_id]`` or
+    ``TENANT_TASK_MIXES``-style tuples on the spec), arrivals an independent
+    Poisson process at its share of ``rps`` (weighted by ``t.rps`` when set,
+    else split evenly) — and the streams merge into one arrival-sorted
+    replay with sequential rids. ``n`` is the total request count, divided
+    proportionally to the rate weights."""
+    tenants = list(tenants)
+    if not tenants:
+        return []
+    weights = np.array([max(float(getattr(t, "rps", 0.0) or 0.0), 0.0)
+                        for t in tenants])
+    if weights.sum() <= 0:
+        weights = np.ones(len(tenants))
+    weights = weights / weights.sum()
+    all_tasks = []
+    for i, t in enumerate(tenants):
+        tasks = tuple(getattr(t, "tasks", ()) or ())
+        if not tasks and tenant_tasks:
+            tasks = tuple(tenant_tasks.get(t.tenant_id, ()))
+        if not tasks:
+            tasks = (i,)
+        all_tasks.append(tasks)
+    if cfg is None:
+        n_tasks = max(max(ts) for ts in all_tasks) + 1
+        cfg = WorkloadConfig(n_tasks=n_tasks)
+    # per-tenant counts: largest-remainder split of n by rate weight
+    counts = np.floor(weights * n).astype(int)
+    rem = n - counts.sum()
+    for i in np.argsort(-(weights * n - counts))[:rem]:
+        counts[i] += 1
+    merged: List[Request] = []
+    for i, t in enumerate(tenants):
+        if counts[i] <= 0:
+            continue
+        reqs = make_dataset(cfg, int(counts[i]), seed=seed + 101 * i,
+                            tasks=list(all_tasks[i]))
+        attach_arrivals(reqs, poisson_arrivals(
+            len(reqs), rps * float(weights[i]), seed=seed + 577 * i))
+        tid = str(t.tenant_id)
+        cls = getattr(t, "sla_class", "standard") or "standard"
+        for r in reqs:
+            r.tenant_id = tid
+            r.sla_class = cls
+        merged.extend(reqs)
+    merged.sort(key=lambda r: r.arrival)
+    for rid, r in enumerate(merged):
+        r.rid = rid
+    return merged

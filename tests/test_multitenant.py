@@ -1,0 +1,431 @@
+"""Multi-tenant serving (DESIGN.md §11): the ServeSpec/TenantSpec surface,
+per-tenant predictor namespaces, SLA-class admission, per-rid deferral
+aging, and GPU-slot quotas.
+
+The bit-identity tests here are the API-redesign contract: the legacy
+``build_engine(**kwargs)`` call sites must run byte-for-byte the same
+engine as the equivalent ``ServeSpec``, and an untenanted engine must be
+untouched by the existence of the tenant machinery."""
+import hashlib
+import json
+
+import numpy as np
+import pytest
+
+from benchmarks.common import build_engine, build_oracle
+from repro.configs import get_config
+from repro.serving import SchedulerConfig
+from repro.serving.request import Request
+from repro.serving.scheduler import SLA_RANK, ContinuousScheduler
+from repro.serving.spec import (PredictorSpec, ServeSpec, TenantSpec,
+                                load_tenants)
+from repro.serving.workload import (WorkloadConfig, attach_arrivals,
+                                    make_dataset, make_multitenant_dataset,
+                                    poisson_arrivals)
+
+ARCH = "switch-base-128"
+
+
+# ---------------------------------------------------------------------------
+# ServeSpec / TenantSpec / PredictorSpec
+# ---------------------------------------------------------------------------
+
+def _demo_spec():
+    return ServeSpec(
+        arch=ARCH, system="moe-infinity", gpu_slots=100, dram_slots=150,
+        max_batch=8, policy="stall",
+        predictor=PredictorSpec(kind="hybrid", path="/tmp/x", capacity=16,
+                                online=True),
+        tenants=(
+            TenantSpec(tenant_id="acme", sla_class="interactive",
+                       predictor=PredictorSpec(kind="eamc", online=True),
+                       stall_budget=12, gpu_slot_quota=40,
+                       tasks=(0, 1), rps=2.0),
+            TenantSpec(tenant_id="globex", sla_class="batch",
+                       shared_fallback=False, tasks=(2,), rps=1.0),
+        ),
+        eamc_tasks=(0, 1, 2), ssd_gbps=3.5, transfer_dtype="fp16", seed=9)
+
+
+def test_spec_json_roundtrip():
+    s = _demo_spec()
+    assert ServeSpec.from_json(s.to_json()) == s
+    # and the dict form is plain JSON-serializable data
+    json.dumps(s.to_dict())
+
+
+def test_load_tenants_bare_list_and_document(tmp_path):
+    s = _demo_spec()
+    doc = tmp_path / "spec.json"
+    doc.write_text(s.to_json())
+    bare = tmp_path / "tenants.json"
+    bare.write_text(json.dumps([t.to_dict() for t in s.tenants]))
+    assert load_tenants(str(doc)) == s.tenants
+    assert load_tenants(str(bare)) == s.tenants
+
+
+def test_predictor_spec_defaults_match_legacy_offline():
+    ps = PredictorSpec()
+    assert (ps.kind, ps.path, ps.online) == ("eamc", None, False)
+
+
+# ---------------------------------------------------------------------------
+# Legacy kwargs -> spec shim: bit identity
+# ---------------------------------------------------------------------------
+
+def _workload(n=12, seed=3):
+    reqs = make_dataset(WorkloadConfig(prompt_len=(16, 32),
+                                       output_len=(6, 12)), n, seed=seed)
+    attach_arrivals(reqs, poisson_arrivals(n, rps=3.0, seed=seed + 1))
+    return reqs
+
+
+def _digest(eng):
+    lat = np.asarray(eng.token_latencies, np.float64)
+    s = eng.stats()
+    return (hashlib.sha256(lat.tobytes()).hexdigest(),
+            eng.offload.gpu_cache.hits, eng.offload.gpu_cache.misses,
+            s["demand_fetches"], round(s["stall_time"], 12))
+
+
+@pytest.mark.parametrize("legacy_kw,spec_kw", [
+    (dict(policy="stall", eamc_mode="online", eamc_capacity=8),
+     dict(policy="stall",
+          predictor=PredictorSpec(kind="eamc", online=True, capacity=8))),
+    (dict(eamc_mode="offline", eamc_capacity=12, predictor="hybrid"),
+     dict(predictor=PredictorSpec(kind="hybrid", online=False,
+                                  capacity=12))),
+])
+def test_spec_path_bit_identical_to_legacy_kwargs(legacy_kw, spec_kw):
+    runs = []
+    for variant in ("legacy", "spec"):
+        oracle = build_oracle(get_config(ARCH))
+        if variant == "legacy":
+            eng = build_engine(ARCH, "moe-infinity", gpu_slots=100,
+                               dram_slots=150, oracle=oracle, **legacy_kw)
+        else:
+            eng = build_engine(ServeSpec(arch=ARCH, system="moe-infinity",
+                                         gpu_slots=100, dram_slots=150,
+                                         **spec_kw), oracle=oracle)
+        eng.run(_workload())
+        runs.append(_digest(eng))
+    assert runs[0] == runs[1]
+
+
+def test_legacy_kwargs_warn_deprecated():
+    import benchmarks.common as bc
+    bc._warned_legacy_kwargs = False
+    with pytest.warns(DeprecationWarning):
+        build_engine(ARCH, "moe-infinity", gpu_slots=100, dram_slots=150,
+                     oracle=build_oracle(get_config(ARCH)))
+
+
+# ---------------------------------------------------------------------------
+# Tenant predictor namespaces: isolation under neighbour drift
+# ---------------------------------------------------------------------------
+
+def _tenant_engine(tenants, **spec_kw):
+    oracle = build_oracle(get_config(ARCH), n_tasks=6)
+    spec = ServeSpec(arch=ARCH, system="moe-infinity", gpu_slots=100,
+                     dram_slots=150,
+                     predictor=PredictorSpec(kind="eamc", online=True,
+                                             capacity=8),
+                     tenants=tuple(tenants), **spec_kw)
+    return build_engine(spec, oracle=oracle)
+
+
+def _run_tenant_phase(eng, tenant_tasks, n=10, seed=0, rid0=0):
+    """One request wave, round-robin over ``{tenant_id: tasks}``."""
+    wl = WorkloadConfig(prompt_len=(16, 32), output_len=(6, 12), n_tasks=6)
+    tids = sorted(tenant_tasks)
+    reqs = []
+    for j in range(n):
+        tid = tids[j % len(tids)]
+        tasks = tenant_tasks[tid]
+        r = make_dataset(wl, 1, seed=seed + j,
+                         tasks=[tasks[j % len(tasks)]])[0]
+        r.rid = rid0 + j
+        r.tenant_id = tid
+        reqs.append(r)
+    attach_arrivals(reqs, poisson_arrivals(n, rps=3.0, seed=seed + 5)
+                    + eng.offload.sim.clock)
+    eng.run(reqs)
+    return reqs
+
+
+def test_tenant_drift_isolation():
+    """Tenant B's drift must not touch tenant A's collection — nor the
+    shared one (strict namespace isolation)."""
+    brain = lambda: PredictorSpec(kind="eamc", online=True, capacity=6)
+    eng = _tenant_engine([
+        TenantSpec(tenant_id="A", predictor=brain(), tasks=(0, 1)),
+        TenantSpec(tenant_id="B", predictor=brain(), tasks=(2, 3)),
+    ])
+    off = eng.offload
+    _run_tenant_phase(eng, {"A": (0, 1), "B": (2, 3)}, n=12, seed=0)
+    a = off.tenant_predictors["A"].eamc
+    ver_a = a.version
+    shared_entries = len(off.eamc.entries)
+    b = off.tenant_predictors["B"].eamc
+    ver_b = b.version
+    # phase 2: B drifts to a disjoint mix, A keeps serving its own
+    _run_tenant_phase(eng, {"A": (0, 1), "B": (4, 5)}, n=12, seed=20,
+                      rid0=100)
+    # A's collection evolved only from A's own (unchanged-mix) traffic:
+    # same entries as a byte-level prefix check would allow — here we
+    # assert the strong §11 property on B's side effects: nothing of B's
+    # drift leaked into the shared collection
+    assert len(off.eamc.entries) == shared_entries == 0
+    assert b.version > ver_b          # B's own brain did learn the drift
+    assert a.version >= ver_a         # A trained only on A
+    # the byte-level guarantee is test_tenant_idle_neighbor_is_byte_identical
+
+
+def test_tenant_idle_neighbor_is_byte_identical():
+    """The sharp isolation contract: if tenant A's traffic is identical
+    across two runs, A's persisted collection is byte-identical whether or
+    not tenant B drifts alongside it."""
+    brain = lambda: PredictorSpec(kind="eamc", online=True, capacity=6)
+
+    def run(b_phase2):
+        eng = _tenant_engine([
+            TenantSpec(tenant_id="A", predictor=brain(), tasks=(0, 1)),
+            TenantSpec(tenant_id="B", predictor=brain(), tasks=(2, 3)),
+        ])
+        _run_tenant_phase(eng, {"A": (0, 1), "B": (2, 3)}, n=12, seed=0)
+        _run_tenant_phase(eng, {"A": (0, 1), "B": b_phase2}, n=12, seed=20,
+                          rid0=100)
+        return eng.offload.tenant_predictors["A"].eamc
+
+    a_stable = run((2, 3))        # B never drifts
+    a_drift = run((4, 5))         # B drifts to a disjoint mix
+    assert len(a_stable.entries) == len(a_drift.entries)
+    for x, y in zip(a_stable.entries, a_drift.entries):
+        assert np.array_equal(x, y)
+
+
+def test_shared_fallback_serves_cold_tenant():
+    eng = _tenant_engine([
+        TenantSpec(tenant_id="A",
+                   predictor=PredictorSpec(kind="eamc", online=True),
+                   shared_fallback=True, tasks=(0,)),
+    ])
+    off = eng.offload
+    assert off.tenant_predictors["A"].is_cold
+    # cold: predictions route to the shared brain
+    assert off.predictor_for("A") is off.predictor
+    _run_tenant_phase(eng, {"A": (0, 1)}, n=8, seed=0)
+    assert not off.tenant_predictors["A"].is_cold
+    assert off.predictor_for("A") is off.tenant_predictors["A"]
+
+
+def test_tenant_predictor_persistence(tmp_path):
+    p = tmp_path / "acme"
+    spec_t = TenantSpec(tenant_id="A",
+                        predictor=PredictorSpec(kind="eamc", online=True,
+                                                capacity=6,
+                                                path=str(p)),
+                        tasks=(0, 1))
+    eng = _tenant_engine([spec_t])
+    _run_tenant_phase(eng, {"A": (0, 1)}, n=10, seed=0)
+    saved = eng.offload.save_tenant_state()
+    assert saved["A"].endswith(".npz")
+    entries = [e.copy() for e in
+               eng.offload.tenant_predictors["A"].eamc.entries]
+    assert entries
+    # a second engine warm-restarts the tenant brain from the .npz
+    eng2 = _tenant_engine([spec_t])
+    assert eng2.offload.tenant_predictor_source["A"] == "load"
+    loaded = eng2.offload.tenant_predictors["A"].eamc.entries
+    assert len(loaded) == len(entries)
+    for x, y in zip(entries, loaded):
+        assert np.array_equal(x, y)
+
+
+def test_tenant_stats_surface():
+    eng = _tenant_engine([
+        TenantSpec(tenant_id="A",
+                   predictor=PredictorSpec(kind="eamc", online=True),
+                   tasks=(0,)),
+        TenantSpec(tenant_id="B", tasks=(1,)),    # shared-namespace tenant
+    ])
+    _run_tenant_phase(eng, {"A": (0,), "B": (1,)}, n=10, seed=0)
+    ts = eng.stats()["tenants"]
+    assert set(ts) == {"A", "B"}
+    for tid in ("A", "B"):
+        assert ts[tid]["gpu_hits"] + ts[tid]["gpu_misses"] > 0
+        assert 0.0 <= ts[tid]["gpu_hit_ratio"] <= 1.0
+        assert ts[tid]["demand_fetches"] >= 0
+    assert ts["A"]["predictor_kind"] == "eamc"
+    assert ts["B"]["predictor_kind"] == "shared"
+
+
+# ---------------------------------------------------------------------------
+# GPU-slot quotas
+# ---------------------------------------------------------------------------
+
+def test_gpu_slot_quota_enforced():
+    q = 8
+    eng = _tenant_engine([
+        TenantSpec(tenant_id="A",
+                   predictor=PredictorSpec(kind="eamc", online=True),
+                   gpu_slot_quota=q, tasks=(0, 1)),
+        TenantSpec(tenant_id="B", tasks=(2, 3)),
+    ])
+    cache = eng.offload.gpu_cache
+    seen = 0
+    for phase in range(3):
+        _run_tenant_phase(eng, {"A": (0, 1), "B": (2, 3)}, n=8,
+                          seed=10 * phase, rid0=100 * phase)
+        owned = cache.owned_count("A")
+        assert owned <= q
+        seen = max(seen, owned)
+    assert seen > 0           # the quota actually bound something
+    # ownership bookkeeping is consistent with residency
+    for key, tid in cache.owner.items():
+        assert key in cache
+    assert sum(cache._owned.values()) == len(cache.owner)
+
+
+# ---------------------------------------------------------------------------
+# SLA-class admission lattice
+# ---------------------------------------------------------------------------
+
+def _req(rid, arrival, sla="standard", tenant=""):
+    r = Request(rid=rid, arrival=arrival,
+                prompt=np.zeros(4, np.int32), max_new_tokens=4)
+    r.sla_class = sla
+    r.tenant_id = tenant
+    return r
+
+
+def test_sla_rank_lattice():
+    assert (SLA_RANK["interactive"] < SLA_RANK["standard"]
+            < SLA_RANK["batch"])
+
+
+def test_sla_class_admission_order():
+    cfg = SchedulerConfig(max_batch=2)
+    sched = ContinuousScheduler(cfg, [
+        _req(0, 0.0, "batch"), _req(1, 0.0, "standard"),
+        _req(2, 0.0, "interactive")])
+    admitted = sched.admit(0.0)
+    assert [r.rid for r in admitted] == [2, 1]
+    sched.on_finish(1)
+    admitted = sched.admit(0.0)
+    assert [r.rid for r in admitted] == [0]
+
+
+def test_sla_fifo_within_class():
+    cfg = SchedulerConfig(max_batch=4)
+    sched = ContinuousScheduler(cfg, [
+        _req(3, 0.3), _req(1, 0.1), _req(2, 0.2), _req(0, 0.0)])
+    assert [r.rid for r in sched.admit(1.0)] == [0, 1, 2, 3]
+
+
+def test_sla_aging_prevents_batch_starvation():
+    """A batch request queued >= 2 aging periods outranks a freshly
+    arrived interactive one."""
+    cfg = SchedulerConfig(max_batch=1, sla_aging_s=1.5)
+    sched = ContinuousScheduler(cfg, [
+        _req(0, 0.0, "batch"), _req(1, 3.1, "interactive")])
+    admitted = sched.admit(3.2)     # batch promo=2 -> rank 0, earlier base
+    assert [r.rid for r in admitted] == [0]
+
+
+def test_single_class_reduces_to_fifo_with_deferral():
+    """Legacy reduction: one class + stall policy == the pre-§11
+    scheduler — FIFO order, head deferral blocks the queue, one deferral
+    counted per admit call."""
+    cfg = SchedulerConfig(max_batch=4, policy="stall", stall_budget=1,
+                          stall_max_wait=10.0)
+    sched = ContinuousScheduler(cfg, [_req(0, 0.0), _req(1, 0.0)],
+                                cold_cost_fn=lambda r: 5)
+    sched.n_running = 1             # live running set: the gate is armed
+    assert sched.admit(0.1) == []
+    assert sched.deferrals == 1
+    assert sched.deferrals_by_class == {"standard": 1}
+    sched.n_running = 0             # idle: admits unconditionally, in order
+    assert [r.rid for r in sched.admit(0.1)] == [0, 1]
+
+
+def test_stall_deferral_blocks_class_not_lattice():
+    """A deferred interactive head must not stop a batch request from
+    taking the free slot (work-conserving across classes), but FIFO within
+    the deferred class holds."""
+    cfg = SchedulerConfig(max_batch=4, policy="stall", stall_budget=1,
+                          stall_max_wait=10.0)
+    costly = {0, 1}                 # both interactive requests are costly
+    sched = ContinuousScheduler(
+        cfg, [_req(0, 0.0, "interactive"), _req(1, 0.0, "interactive"),
+              _req(2, 0.0, "batch")],
+        cold_cost_fn=lambda r: 5 if r.rid in costly else 0)
+    sched.n_running = 1
+    admitted = sched.admit(0.1)
+    assert [r.rid for r in admitted] == [2]
+    assert sched.deferrals_by_class == {"interactive": 1}
+
+
+def test_per_rid_deferral_aging_survives_requeue():
+    """The §11 bugfix: a deferred request that is re-queued keeps its
+    original aging base, so ``stall_max_wait`` bounds its *total* wait —
+    not the wait since its latest re-queue."""
+    cfg = SchedulerConfig(max_batch=4, policy="stall", stall_budget=1,
+                          stall_max_wait=0.75)
+    sched = ContinuousScheduler(cfg, [], cold_cost_fn=lambda r: 100)
+    sched.n_running = 1
+    sched.add(_req(7, 0.0))
+    assert sched.admit(0.5) == []               # deferred, under the bound
+    # re-queue the same rid with a later arrival (interleaving /
+    # re-submission): the aging base must survive
+    sched.waiting.clear()
+    sched.add(_req(7, 0.6))
+    assert [r.rid for r in sched.admit(0.8)] == [7]   # 0.8 - 0.0 >= 0.75
+    # control: a genuinely fresh rid with the same arrival still defers
+    sched.add(_req(8, 0.6))
+    assert sched.admit(0.8) == []
+
+
+def test_per_tenant_stall_budget():
+    cfg = SchedulerConfig(max_batch=4, policy="stall", stall_budget=1,
+                          stall_max_wait=10.0)
+
+    def mk(budgets):
+        s = ContinuousScheduler(cfg, [_req(0, 0.0, tenant="acme")],
+                                cold_cost_fn=lambda r: 5,
+                                stall_budgets=budgets)
+        s.n_running = 1
+        return s
+
+    assert mk(None).admit(0.1) == []                  # global budget: defer
+    assert [r.rid for r in mk({"acme": 100}).admit(0.1)] == [0]
+
+
+# ---------------------------------------------------------------------------
+# Mixed-workload generator
+# ---------------------------------------------------------------------------
+
+def test_make_multitenant_dataset_shape():
+    tenants = (TenantSpec(tenant_id="t0", sla_class="interactive",
+                          tasks=(0, 1), rps=2.0),
+               TenantSpec(tenant_id="t1", sla_class="batch",
+                          tasks=(2,), rps=1.0))
+    reqs = make_multitenant_dataset(tenants, 30, seed=1, rps=3.0)
+    assert len(reqs) == 30
+    assert [r.rid for r in reqs] == list(range(30))
+    arr = [r.arrival for r in reqs]
+    assert arr == sorted(arr)
+    by = {}
+    for r in reqs:
+        by.setdefault(r.tenant_id, []).append(r)
+    assert set(by) == {"t0", "t1"}
+    assert len(by["t0"]) == 20 and len(by["t1"]) == 10   # 2:1 rps split
+    assert all(r.sla_class == "interactive" for r in by["t0"])
+    assert all(r.task_id in (0, 1) for r in by["t0"])
+    assert all(r.task_id == 2 for r in by["t1"])
+
+
+def test_untenanted_requests_keep_defaults():
+    r = Request(rid=0, arrival=0.0, prompt=np.zeros(2, np.int32),
+                max_new_tokens=1)
+    assert (r.tenant_id, r.sla_class) == ("", "standard")
